@@ -1,0 +1,50 @@
+"""Shared benchmark plumbing: timing, one-time surrogate training cache."""
+from __future__ import annotations
+
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
+MODELS = ART / "models"
+
+
+def timeit(fn, *args, reps=5, warmup=1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def get_surrogate(app_name, app, *, n=1024, epochs=20, outer=4, inner=0,
+                  force=False):
+    """Train (once) and cache a surrogate bundle for `app`."""
+    from repro.nas.nested import best_trial, nested_search, save_trial
+    path = MODELS / app_name
+    if (path / "spec.json").exists() and not force:
+        return str(path)
+    db_dir = ART / "db" / app_name
+    if app_name == "miniweather":
+        region = app.make_region(mode="collect", database=str(db_dir))
+        s = app.init_state()
+        for _ in range(max(80, n // 8)):
+            s = region(state=s)["state"]
+    elif app_name == "particlefilter":
+        frames, _ = app.make_video(n)
+        region = app.make_region(n, mode="collect", database=str(db_dir))
+        region(frames=frames.reshape(n, -1))
+    else:
+        x = app.make_inputs(n)
+        region = app.make_region(n, mode="collect", database=str(db_dir))
+        key = list(region.inputs)[0]
+        region(**{key: x})
+    region.db.flush()
+    res = nested_search(app, region.db.group(app_name), outer_iters=outer,
+                        inner_iters=inner, epochs=epochs, verbose=False)
+    return save_trial(best_trial(res), path)

@@ -1,0 +1,77 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (Python
+emulation — not a performance measurement), so wall-clock rows are taken
+from the jnp reference paths; the kernels' TPU value is argued in the
+roofline analysis.  Rows still record interpret-mode validation deltas.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+
+
+def kernel_bench(fast=False):
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # stencil gather (data bridge hot path)
+    from repro.kernels.stencil_gather.ref import stencil_gather_ref
+    x = jnp.asarray(rng.normal(size=(512, 512)).astype(np.float32))
+    offs = ((0, 1), (2, 0), (1, 1), (0, 0), (1, 2))
+    f = jax.jit(lambda x: stencil_gather_ref(x, offs, 508, 508, origin=(1, 1)))
+    t = timeit(f, x, reps=5)
+    bytes_moved = 508 * 508 * 5 * 4 * 2
+    rows.append(("kernel/stencil_gather_ref_512", t * 1e6,
+                 f"gb_s={bytes_moved/t/1e9:.2f}"))
+
+    # fused MLP surrogate inference
+    from repro.kernels.fused_mlp.ref import fused_mlp_ref
+    ws = [jnp.asarray(rng.normal(size=(64, 256)).astype(np.float32)),
+          jnp.asarray(rng.normal(size=(256, 256)).astype(np.float32)),
+          jnp.asarray(rng.normal(size=(256, 1)).astype(np.float32))]
+    bs = [jnp.zeros(256), jnp.zeros(256), jnp.zeros(1)]
+    xx = jnp.asarray(rng.normal(size=(4096, 64)).astype(np.float32))
+    f = jax.jit(lambda x: fused_mlp_ref(x, ws, bs, ("relu", "relu", "identity")))
+    t = timeit(f, xx, reps=5)
+    flops = 2 * 4096 * (64 * 256 + 256 * 256 + 256)
+    rows.append(("kernel/fused_mlp_ref_b4096", t * 1e6,
+                 f"gflops_s={flops/t/1e9:.2f}"))
+
+    # flash attention
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    S = 256 if fast else 512
+    q = jnp.asarray(rng.normal(size=(1, S, 8, 64)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, S, 2, 64)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, S, 2, 64)).astype(np.float32))
+    f = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v, causal=True))
+    t = timeit(f, q, k, v, reps=3)
+    flops = 4 * S * S * 8 * 64
+    rows.append((f"kernel/flash_attention_ref_s{S}", t * 1e6,
+                 f"gflops_s={flops/t/1e9:.2f}"))
+
+    # rwkv6 chunk
+    from repro.kernels.rwkv6_chunk.ref import rwkv6_chunk_ref
+    B, T, H, hd = 2, 128, 8, 64
+    r, kk, vv = (jnp.asarray(rng.normal(size=(B, T, H, hd)).astype(np.float32))
+                 for _ in range(3))
+    w = jnp.asarray(rng.uniform(0.9, 0.999, (B, T, H, hd)).astype(np.float32))
+    u = jnp.asarray(rng.normal(size=(H, hd)).astype(np.float32))
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    f = jax.jit(lambda *a: rwkv6_chunk_ref(*a)[0])
+    t = timeit(f, r, kk, vv, w, u, s0, reps=3)
+    flops = B * T * H * hd * hd * 6
+    rows.append((f"kernel/rwkv6_chunk_ref_t{T}", t * 1e6,
+                 f"gflops_s={flops/t/1e9:.2f}"))
+
+    # interpret-mode validation deltas (correctness, not speed)
+    from repro.kernels.flash_attention.flash_attention import flash_attention
+    a = flash_attention(q[:, :64], k[:, :64], v[:, :64], causal=True,
+                        block_q=32, block_k=32)
+    b = flash_attention_ref(q[:, :64], k[:, :64], v[:, :64], causal=True)
+    rows.append(("kernel/flash_interpret_maxerr", 0.0,
+                 f"err={float(jnp.abs(a-b).max()):.2e}"))
+    return rows

@@ -1,0 +1,75 @@
+"""Roofline reporting: reads artifacts/dryrun/*.json into the §Roofline
+table (terms in seconds, dominant bottleneck, MODEL_FLOPS/HLO ratio)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+ARCHS = ["whisper-medium", "rwkv6-1.6b", "qwen1.5-32b", "llama3.2-3b",
+         "qwen3-4b", "qwen1.5-110b", "jamba-v0.1-52b", "qwen2-vl-7b",
+         "deepseek-v2-lite-16b", "grok-1-314b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_cell(arch, shape, mesh="pod16x16", variant="baseline"):
+    p = ART / f"{arch}__{shape}__{mesh}__{variant}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def roofline_rows(fast=False):
+    rows = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            rec = load_cell(arch, shape)
+            if rec is None:
+                rows.append((f"roofline/{arch}/{shape}", 0.0, "missing"))
+                continue
+            if "roofline" not in rec:
+                rows.append((f"roofline/{arch}/{shape}", 0.0,
+                             rec.get("status", "?")))
+                continue
+            r = rec["roofline"]
+            rows.append((
+                f"roofline/{arch}/{shape}",
+                r["step_time_s"] * 1e6,
+                f"dom={r['dominant']};compute_s={r['compute_s']:.4g};"
+                f"memory_s={r['memory_s']:.4g};"
+                f"collective_s={r['collective_s']:.4g};"
+                f"useful_flops={r['useful_flops_fraction']*100:.0f}%;"
+                f"mfu_bound={r['mfu_bound']*100:.1f}%;"
+                f"mem_chip_gb={rec['memory']['peak_per_chip_bytes']/1e9:.1f}",
+            ))
+    return rows
+
+
+def markdown_table(mesh="pod16x16", variant="baseline"):
+    lines = ["| arch | shape | compute_s | memory_s | collective_s | "
+             "dominant | useful FLOPs | MFU bound | resident GB/chip | fits |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for arch in ARCHS:
+        for shape in SHAPES:
+            rec = load_cell(arch, shape, mesh, variant)
+            if rec is None:
+                continue
+            if "roofline" not in rec:
+                lines.append(f"| {arch} | {shape} | - | - | - | "
+                             f"{rec.get('status','?')} | - | - | - | - |")
+                continue
+            r = rec["roofline"]
+            res = rec.get("analytic", {}).get("est_hbm_per_chip", 0) / 1e9
+            fits = "yes" if rec.get("fits_16GB_analytic") else "NO"
+            lines.append(
+                f"| {arch} | {shape} | {r['compute_s']:.3g} | "
+                f"{r['memory_s']:.3g} | {r['collective_s']:.3g} | "
+                f"**{r['dominant']}** | "
+                f"{r['useful_flops_fraction']*100:.0f}% | "
+                f"{r['mfu_bound']*100:.1f}% | {res:.2f} | {fits} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

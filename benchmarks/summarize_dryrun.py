@@ -1,0 +1,53 @@
+"""Summarize dry-run artifacts: pick hillclimb targets, dump tables.
+
+  PYTHONPATH=src python benchmarks/summarize_dryrun.py
+"""
+import json
+import pathlib
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def main():
+    recs = []
+    for p in sorted(ART.glob("*__baseline.json")):
+        r = json.loads(p.read_text())
+        recs.append(r)
+    sp = [r for r in recs if r["mesh"] == "pod16x16"]
+    mp = [r for r in recs if r["mesh"] == "pod2x16x16"]
+    print(f"{len(sp)} single-pod cells, {len(mp)} multi-pod cells")
+    ok = [r for r in sp if r.get("status") == "ok"]
+    skip = [r for r in sp if "skipped" in r.get("status", "")]
+    fail = [r for r in sp if r.get("status", "").startswith("FAIL")]
+    print(f"single-pod: ok={len(ok)} skipped={len(skip)} fail={len(fail)}")
+    for r in fail:
+        print("  FAIL:", r["arch"], r["shape"], r["status"][:120])
+    mp_ok = [r for r in mp if r.get("status") == "ok"]
+    mp_fail = [r for r in mp if r.get("status", "").startswith("FAIL")]
+    print(f"multi-pod: ok={len(mp_ok)} fail={len(mp_fail)}")
+    for r in mp_fail:
+        print("  FAIL:", r["arch"], r["shape"], r["status"][:120])
+
+    print("\n== worst useful-FLOPs fraction (roofline candidates) ==")
+    rows = sorted((r for r in ok), key=lambda r: r["roofline"]["useful_flops_fraction"])
+    for r in rows[:8]:
+        rf = r["roofline"]
+        print(f"  {r['arch']:22s} {r['shape']:12s} useful="
+              f"{rf['useful_flops_fraction']*100:5.1f}% dom={rf['dominant']:10s} "
+              f"t={rf['step_time_s']*1e3:9.2f}ms mfu_bound={rf['mfu_bound']*100:5.2f}%")
+    print("\n== most collective-bound ==")
+    rows = sorted(ok, key=lambda r: -(r["roofline"]["collective_s"]
+                                      / max(r["roofline"]["step_time_s"], 1e-12)))
+    for r in rows[:8]:
+        rf = r["roofline"]
+        print(f"  {r['arch']:22s} {r['shape']:12s} coll={rf['collective_s']:8.3f}s "
+              f"of t={rf['step_time_s']:8.3f}s dom={rf['dominant']}")
+    print("\n== memory fits (analytic resident+activations) ==")
+    for r in ok:
+        if not r.get("fits_16GB_analytic", True):
+            print(f"  OVER: {r['arch']} {r['shape']} "
+                  f"{r['analytic']['est_hbm_per_chip']/1e9:.1f}GB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from repro.apps import binomial, bonds, minibude, miniweather, particlefilter
+
+ALL_APPS = {
+    "minibude": minibude,
+    "binomial": binomial,
+    "bonds": bonds,
+    "miniweather": miniweather,
+    "particlefilter": particlefilter,
+}

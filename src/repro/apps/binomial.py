@@ -1,0 +1,82 @@
+"""Binomial Options: CRR lattice pricing of American puts.
+
+Accurate path: backward induction over a 256-step binomial tree per
+option (iterative, like the CUDA benchmark).  QoI: option price.
+Metric: RMSE.  Surrogate: small MLP on (S, K, T, r, sigma).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import approx_ml, tensor_functor
+
+N_STEPS = 256
+
+_ifn = tensor_functor("bin_in: [i, 0:5] = ([i, 0:5])")
+_ofn = tensor_functor("bin_out: [i, 0:1] = ([i, 0:1])")
+
+
+def make_inputs(n, seed=0):
+    """[n, 5] = (S, K, T, r, sigma)."""
+    rng = np.random.default_rng(seed)
+    S = rng.uniform(5, 30, n)
+    K = rng.uniform(1, 100, n)
+    T = rng.uniform(0.25, 10, n)
+    r = rng.uniform(0.01, 0.06, n)
+    sig = rng.uniform(0.05, 0.5, n)
+    return jnp.asarray(np.stack([S, K, T, r, sig], 1).astype(np.float32))
+
+
+def _price_one(opt):
+    S, K, T, r, sig = opt[0], opt[1], opt[2], opt[3], opt[4]
+    dt = T / N_STEPS
+    u = jnp.exp(sig * jnp.sqrt(dt))
+    d = 1.0 / u
+    p = (jnp.exp(r * dt) - d) / (u - d)
+    disc = jnp.exp(-r * dt)
+    j = jnp.arange(N_STEPS + 1)
+    prices = S * u ** (2 * j - N_STEPS)
+    vals = jnp.maximum(K - prices, 0.0)  # american put payoff at expiry
+
+    def step(vals, i):
+        cont = disc * (p * vals[1:] + (1 - p) * vals[:-1])
+        level = N_STEPS - 1 - i
+        j = jnp.arange(N_STEPS)
+        spot = S * u ** (2 * j - level)
+        ex = jnp.maximum(K - spot, 0.0)
+        new = jnp.maximum(cont, ex)
+        return jnp.concatenate([new, jnp.zeros(1)]), None
+
+    vals, _ = jax.lax.scan(step, vals, jnp.arange(N_STEPS))
+    return vals[0]
+
+
+@jax.jit
+def prices(opts):
+    return jax.vmap(_price_one)(opts)
+
+
+def accurate(opts):
+    return {"out": prices(opts)[:, None]}
+
+
+def make_region(n, mode="collect", model=None, database=None):
+    rngs = {"i": (0, n)}
+    return approx_ml(lambda opts: {"out": prices(opts)[:, None]},
+                     name="binomial",
+                     inputs={"opts": (_ifn, rngs)},
+                     outputs={"out": (_ofn, rngs)},
+                     mode=mode, model=model, database=database)
+
+
+def qoi_error(ref, approx):
+    ref = np.asarray(ref).reshape(-1)
+    approx = np.asarray(approx).reshape(-1)
+    return float(np.sqrt(np.mean((ref - approx) ** 2)))
+
+
+def surrogate_space():
+    return {"kind": "mlp", "in_dim": 5, "out_dim": 1,
+            "hidden1": (32, 512, "log2"), "hidden2": (0, 512, "log2")}

@@ -1,0 +1,74 @@
+"""Bonds: fixed-rate bond valuation with a flat forward curve.
+
+Accurate path: per-bond loop over coupon periods (masked scan) computing
+dirty price and accrued interest.  QoI: accrued interest.  Metric: RMSE.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import approx_ml, tensor_functor
+
+MAX_PERIODS = 60  # semiannual coupons, up to 30y
+
+_ifn = tensor_functor("bond_in: [i, 0:4] = ([i, 0:4])")
+_ofn = tensor_functor("bond_out: [i, 0:2] = ([i, 0:2])")
+
+
+def make_inputs(n, seed=0):
+    """[n, 4] = (coupon_rate, ytm, years_to_maturity, accrual_frac)."""
+    rng = np.random.default_rng(seed)
+    coupon = rng.uniform(0.01, 0.09, n)
+    ytm = rng.uniform(0.005, 0.10, n)
+    years = rng.uniform(0.5, 30.0, n)
+    accr = rng.uniform(0.0, 1.0, n)
+    return jnp.asarray(np.stack([coupon, ytm, years, accr], 1).astype(np.float32))
+
+
+def _value_one(bond, face=100.0, freq=2.0):
+    coupon, ytm, years, accr = bond[0], bond[1], bond[2], bond[3]
+    nper = jnp.floor(years * freq)
+    cpn = face * coupon / freq
+    per = jnp.arange(1, MAX_PERIODS + 1, dtype=jnp.float32)
+    t = (per - accr) / freq
+    mask = per <= nper
+    df = jnp.exp(-ytm * t)  # flat forward curve, continuous compounding
+    pv_coupons = jnp.where(mask, cpn * df, 0.0).sum()
+    t_face = (nper - accr) / freq
+    pv_face = face * jnp.exp(-ytm * t_face)
+    dirty = pv_coupons + pv_face
+    accrued = cpn * accr
+    return jnp.stack([accrued, dirty])
+
+
+@jax.jit
+def valuations(bonds):
+    """[n,4] -> [n,2] = (accrued interest, dirty price)."""
+    return jax.vmap(_value_one)(bonds)
+
+
+def accurate(bonds):
+    return {"out": valuations(bonds)}
+
+
+def make_region(n, mode="collect", model=None, database=None):
+    rngs = {"i": (0, n)}
+    return approx_ml(lambda bonds: {"out": valuations(bonds)},
+                     name="bonds",
+                     inputs={"bonds": (_ifn, rngs)},
+                     outputs={"out": (_ofn, rngs)},
+                     mode=mode, model=model, database=database)
+
+
+def qoi_error(ref, approx):
+    """RMSE over accrued interest (paper's QoI)."""
+    ref = np.asarray(ref)[:, 0]
+    approx = np.asarray(approx)[:, 0]
+    return float(np.sqrt(np.mean((ref - approx) ** 2)))
+
+
+def surrogate_space():
+    return {"kind": "mlp", "in_dim": 4, "out_dim": 2,
+            "hidden1": (32, 512, "log2"), "hidden2": (0, 512, "log2")}

@@ -1,0 +1,100 @@
+"""MiniBUDE (virtual screening): pose -> ligand-protein binding energy.
+
+The accurate path evaluates an empirical forcefield over all ligand x
+protein atom pairs for every pose (compute-bound, like the original
+mini-app).  QoI: per-pose energy.  Metric: MAPE (paper Table I).
+
+Surrogate: MLP pose[6] -> energy (paper Table IV space: 2-12 hidden
+layers, width 64..4096 with a feature multiplier).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import approx_ml, tensor_functor
+
+N_LIG, N_PROT = 16, 64
+
+_ifn = tensor_functor("bude_in: [i, 0:6] = ([i, 0:6])")
+_ofn = tensor_functor("bude_out: [i, 0:1] = ([i, 0:1])")
+
+
+def make_molecule(seed=0):
+    rng = np.random.default_rng(seed)
+    lig = jnp.asarray(rng.normal(0, 1.0, (N_LIG, 3)).astype(np.float32))
+    prot = jnp.asarray(rng.normal(0, 4.0, (N_PROT, 3)).astype(np.float32))
+    lq = jnp.asarray(rng.uniform(-1, 1, (N_LIG,)).astype(np.float32))
+    pq = jnp.asarray(rng.uniform(-1, 1, (N_PROT,)).astype(np.float32))
+    lr = jnp.asarray(rng.uniform(1.0, 2.0, (N_LIG,)).astype(np.float32))
+    pr = jnp.asarray(rng.uniform(1.0, 2.0, (N_PROT,)).astype(np.float32))
+    return dict(lig=lig, prot=prot, lq=lq, pq=pq, lr=lr, pr=pr)
+
+
+MOL = make_molecule()
+
+
+def make_inputs(n, seed=0):
+    """Poses: [n, 6] = (rx, ry, rz, tx, ty, tz)."""
+    rng = np.random.default_rng(seed)
+    rot = rng.uniform(-np.pi, np.pi, (n, 3))
+    trans = rng.uniform(-2, 2, (n, 3))
+    return jnp.asarray(np.concatenate([rot, trans], 1).astype(np.float32))
+
+
+def _rot_matrix(r):
+    cx, cy, cz = jnp.cos(r[0]), jnp.cos(r[1]), jnp.cos(r[2])
+    sx, sy, sz = jnp.sin(r[0]), jnp.sin(r[1]), jnp.sin(r[2])
+    Rx = jnp.array([[1, 0, 0], [0, cx, -sx], [0, sx, cx]])
+    Ry = jnp.array([[cy, 0, sy], [0, 1, 0], [-sy, 0, cy]])
+    Rz = jnp.array([[cz, -sz, 0], [sz, cz, 0], [0, 0, 1]])
+    return Rz @ Ry @ Rx
+
+
+def _pose_energy(pose, mol):
+    R = _rot_matrix(pose[:3])
+    lig = mol["lig"] @ R.T + pose[3:]
+    # soft-core distances (standard forcefield softening): bounds the
+    # r^-12 steric wall so energies stay in a learnable range
+    d2 = jnp.sum((lig[:, None, :] - mol["prot"][None]) ** 2, axis=-1)
+    d = jnp.sqrt(d2 + 0.5)
+    elec = mol["lq"][:, None] * mol["pq"][None] / d
+    sigma = (mol["lr"][:, None] + mol["pr"][None]) * 0.5
+    sr6 = jnp.minimum(sigma / d, 1.4) ** 6
+    steric = sr6 * sr6 - sr6
+    return (elec + 0.1 * steric).sum()
+
+
+@jax.jit
+def energies(poses):
+    """Accurate path: [n, 6] poses -> [n] binding energies."""
+    return jax.vmap(lambda p: _pose_energy(p, MOL))(poses)
+
+
+def accurate(poses):
+    return {"out": energies(poses)[:, None]}
+
+
+def make_region(n, mode="collect", model=None, database=None):
+    rngs = {"i": (0, n)}
+    return approx_ml(lambda poses: {"out": energies(poses)[:, None]},
+                     name="minibude",
+                     inputs={"poses": (_ifn, rngs)},
+                     outputs={"out": (_ofn, rngs)},
+                     mode=mode, model=model, database=database)
+
+
+def qoi_error(ref, approx):
+    """MAPE over pose energies."""
+    ref = np.asarray(ref).reshape(-1)
+    approx = np.asarray(approx).reshape(-1)
+    return float(np.mean(np.abs((approx - ref) / (np.abs(ref) + 1e-6)))) * 100
+
+
+def surrogate_space():
+    return {
+        "kind": "mlp", "in_dim": 6, "out_dim": 1,
+        "n_hidden": (2, 6), "hidden1": (64, 1024, "log2"),
+        "feature_mult": (0.1, 0.8),
+    }

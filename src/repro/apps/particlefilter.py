@@ -1,0 +1,108 @@
+"""ParticleFilter (Rodinia): track an object through noisy video frames.
+
+Accurate path: bootstrap particle filter — propagate, reweight by frame
+likelihood, systematic resample, estimate.  It is itself an *algorithmic
+approximation* whose RMSE floor is set by measurement noise — the paper's
+Observation 1 benchmark (a CNN surrogate beats it on both speed and
+accuracy).  QoI: object (x, y) per frame.  Metric: RMSE.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import approx_ml, tensor_functor
+
+H = W = 24
+N_PART = 256
+NOISE = 0.35
+
+frame_fn = tensor_functor(f"pf_in: [i, 0:{H * W}] = ([i, 0:{H * W}])")
+loc_fn = tensor_functor("pf_out: [i, 0:2] = ([i, 0:2])")
+
+
+def make_video(n_frames, seed=0):
+    """Returns (frames [T, H, W], truth [T, 2])."""
+    rng = np.random.default_rng(seed)
+    pos = np.array([H * 0.3, W * 0.3])
+    vel = np.array([0.7, 0.5])
+    frames, truth = [], []
+    yy, xx = np.mgrid[0:H, 0:W]
+    for t in range(n_frames):
+        pos = pos + vel + rng.normal(0, 0.15, 2)
+        vel = vel * 0.99 + rng.normal(0, 0.05, 2)
+        pos = np.clip(pos, 2, H - 3)
+        vel = np.where((pos <= 2) | (pos >= H - 3), -vel, vel)
+        img = np.exp(-((yy - pos[0]) ** 2 + (xx - pos[1]) ** 2) / 6.0)
+        img = img + rng.normal(0, NOISE, img.shape)
+        frames.append(img.astype(np.float32))
+        truth.append(pos.copy())
+    return jnp.asarray(np.stack(frames)), jnp.asarray(
+        np.stack(truth).astype(np.float32))
+
+
+def _pf_step(carry, frame, key):
+    parts, vels = carry
+    k1, k2, k3 = jax.random.split(key, 3)
+    vels = vels * 0.95 + jax.random.normal(k1, vels.shape) * 0.12
+    parts = jnp.clip(parts + vels + jax.random.normal(k2, parts.shape) * 0.35,
+                     0, H - 1)
+    iy = jnp.clip(parts[:, 0].astype(jnp.int32), 1, H - 2)
+    ix = jnp.clip(parts[:, 1].astype(jnp.int32), 1, W - 2)
+    # 3x3 patch likelihood (template = bright blob center)
+    patch = sum(frame[iy + dy, ix + dx]
+                for dy in (-1, 0, 1) for dx in (-1, 0, 1)) / 9.0
+    w = jax.nn.softmax(patch * 24.0)
+    est = (w[:, None] * parts).sum(0)
+    # systematic resampling
+    cum = jnp.cumsum(w)
+    u = (jax.random.uniform(k3) + jnp.arange(N_PART)) / N_PART
+    idx = jnp.searchsorted(cum, u)
+    return (parts[idx], vels[idx]), est
+
+
+@functools.partial(jax.jit, static_argnames=())
+def track(frames, seed=0):
+    """Accurate path: [T, H, W] frames -> [T, 2] estimates."""
+    key = jax.random.PRNGKey(seed)
+    parts = jnp.full((N_PART, 2), H * 0.3) + \
+        jax.random.normal(key, (N_PART, 2)) * 2.0
+    vels = jnp.zeros((N_PART, 2))
+
+    def body(carry, xs):
+        frame, k = xs
+        return _pf_step(carry, frame, k)
+
+    keys = jax.random.split(key, frames.shape[0])
+    _, ests = jax.lax.scan(body, (parts, vels), (frames, keys))
+    return ests
+
+
+def accurate(frames):
+    return {"loc": track(frames)}
+
+
+def make_region(n_frames, mode="collect", model=None, database=None):
+    """Region input is the flattened video [T, H*W] (tensor-space layout)."""
+    rngs = {"i": (0, n_frames)}
+    return approx_ml(
+        lambda frames: {"loc": track(frames.reshape(-1, H, W))},
+        name="particlefilter",
+        inputs={"frames": (frame_fn, {"i": (0, n_frames)})},
+        outputs={"loc": (loc_fn, rngs)},
+        mode=mode, model=model, database=database)
+
+
+def qoi_error(truth, est):
+    t = np.asarray(truth).reshape(-1, 2)
+    e = np.asarray(est).reshape(-1, 2)
+    return float(np.sqrt(np.mean(np.sum((t - e) ** 2, axis=1))))
+
+
+def surrogate_space():
+    return {"kind": "cnn", "grid": (H, W), "in_ch": 1, "out_ch": 2,
+            "conv_k": (2, 8), "stride": (1, 4), "pool": (1, 4),
+            "fc2": (0, 128)}

@@ -1,0 +1,122 @@
+"""Fault-tolerant checkpointing.
+
+* atomic: write to ``step_XXXX.tmp`` then rename — a crash mid-write never
+  corrupts the latest checkpoint;
+* keep-k rotation;
+* async: the device->host gather happens on the caller thread (cheap), the
+  file write runs on a background writer thread;
+* **elastic re-shard on load**: checkpoints store global arrays + the tree
+  structure, so ``restore`` lays the state onto whatever mesh/sharding the
+  *current* job runs with (different host/chip count than the writer) —
+  node-failure recovery onto a smaller or larger slice.
+
+Bitwise-exact resume is tested in tests/test_checkpoint.py.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _paths_and_leaves(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return keys, leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory, keep: int = 3, async_write: bool = True):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_write = async_write
+        self._thread = None
+
+    # ---------------------------------------------------------- save ------
+    def save(self, step: int, state) -> None:
+        keys, leaves, _ = _paths_and_leaves(state)
+        host = [np.asarray(x) for x in leaves]  # gather to host (global)
+        self.wait()
+        if self.async_write:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, keys, host), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, keys, host)
+
+    def _write(self, step, keys, host):
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        final = self.dir / f"step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        np.savez(tmp / "arrays.npz",
+                 **{f"a{i}": a for i, a in enumerate(host)})
+        (tmp / "meta.json").write_text(json.dumps(
+            {"step": step, "keys": keys,
+             "dtypes": [str(a.dtype) for a in host]}))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # --------------------------------------------------------- restore ----
+    def all_steps(self):
+        out = []
+        for p in self.dir.iterdir():
+            m = re.fullmatch(r"step_(\d+)", p.name)
+            if m and (p / "meta.json").exists():
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self):
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, state_like, step: int | None = None, shardings=None):
+        """Restore into the structure of ``state_like``.
+
+        ``shardings``: optional matching pytree of NamedShardings — the
+        elastic path: arrays are laid out for the *current* mesh regardless
+        of the topology that wrote the checkpoint.
+        """
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        meta = json.loads((d / "meta.json").read_text())
+        z = np.load(d / "arrays.npz")
+        by_key = {k: z[f"a{i}"] for i, k in enumerate(meta["keys"])}
+        keys, leaves, treedef = _paths_and_leaves(state_like)
+        shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                        else [None] * len(leaves))
+        dt_by_key = dict(zip(meta["keys"], meta["dtypes"]))
+        out = []
+        for k, ref, sh in zip(keys, leaves, shard_leaves):
+            a = by_key[k]
+            if a.dtype.kind == "V":  # npz round-trips bf16 as raw void16
+                a = a.view(np.dtype(dt_by_key[k]))
+            arr = jax.numpy.asarray(a, dtype=ref.dtype)
+            if sh is not None:
+                arr = jax.device_put(arr, sh)
+            out.append(arr)
+        return jax.tree_util.tree_unflatten(treedef, out), step

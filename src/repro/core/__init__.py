@@ -1,0 +1,6 @@
+from repro.core.database import SurrogateDB
+from repro.core.engine import InferenceEngine
+from repro.core.functor import (SSlice, SymExpr, TensorFunctor, sym,
+                                tensor_functor)
+from repro.core.region import MLRegion, approx_ml
+from repro.core.tensor_map import TensorMap

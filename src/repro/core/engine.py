@@ -1,0 +1,83 @@
+"""Inference engine: loads a model bundle once, jit-compiles its apply, and
+serves region invocations (the Torch-C++ role in the paper's runtime).
+
+Supports sharded inference: with a mesh installed, inputs are constrained
+over the ``data`` axis, so surrogate batches scale across chips like any
+other data-parallel workload.  On TPU the engine routes pure-MLP bundles
+through the ``fused_mlp`` Pallas kernel (all layers resident in VMEM —
+the paper's Observation 2, hardware-utilization, reinterpreted for TPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.nn.serialize import load_model
+
+
+class InferenceEngine:
+    _cache: dict = {}
+
+    def __init__(self, model_path: str, use_kernel: str = "auto"):
+        self.path = str(model_path)
+        self.net, self.params, self.spec = load_model(model_path)
+        self.use_kernel = use_kernel
+        self._apply = None
+
+    @classmethod
+    def get(cls, model_path) -> "InferenceEngine":
+        """Process-wide cache: a model file is loaded once (paper §IV-B)."""
+        key = str(model_path)
+        if key not in cls._cache:
+            cls._cache[key] = cls(key)
+        return cls._cache[key]
+
+    def _is_pure_mlp(self):
+        kinds = [l["kind"] for l in self.spec["layers"]]
+        return all(k in ("dense", "act", "flatten") for k in kinds)
+
+    def _build(self):
+        net = self.net
+        extra = self.spec.get("extra") or {}
+        norm = None
+        if "x_mu" in extra:
+            import numpy as np
+            ish = tuple(self.spec["in_shape"][1:])
+            osh = tuple(net.out_shape()[1:])
+            norm = tuple(jnp.asarray(np.asarray(extra[k], np.float32)
+                                     .reshape(s))
+                         for k, s in (("x_mu", ish), ("x_sd", ish),
+                                      ("y_mu", osh), ("y_sd", osh)))
+
+        if self.use_kernel != "never" and self._is_pure_mlp() and \
+                jax.default_backend() == "tpu":
+            from repro.kernels.fused_mlp import ops as fused_ops
+
+            def raw(params, x):
+                return fused_ops.fused_mlp_from_spec(self.spec, params, x)
+        else:
+            def raw(params, x):
+                return net.apply(params, x)
+
+        def apply_fn(params, x):
+            x = constrain(x, "data", None)
+            if norm is not None:
+                x = (x - norm[0]) / norm[1]
+            y = raw(params, x)
+            if norm is not None:
+                y = y * norm[3] + norm[2]
+            return y
+
+        self._apply = jax.jit(apply_fn)
+
+    def __call__(self, x):
+        if self._apply is None:
+            self._build()
+        return self._apply(self.params, x)
+
+    def infer_shape(self, in_shape):
+        return self.net.out_shape()

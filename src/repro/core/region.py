@@ -1,0 +1,189 @@
+"""Execution control: the ``approx ml`` region (paper §III, §IV-B).
+
+``MLRegion`` wraps the *accurate execution path* (a JAX-traceable function)
+and, per the paper's three ml-modes:
+
+  * ``collect``    — run the accurate path, bridge its inputs/outputs to
+                     tensor space, and append (inputs, outputs, runtime) to
+                     the SurrogateDB group of this region;
+  * ``infer``      — replace the region with surrogate inference through
+                     the data bridge;
+  * ``predicated`` — a runtime boolean picks the path per invocation; both
+                     execution paths live in the same traced program
+                     (``lax.cond``), the JAX analogue of HPAC's dual
+                     execution paths in one binary.
+
+Eager calls are host-timed exactly; calls inside a jit trace fall back to
+ordered ``io_callback`` timing/persistence (documented approximation).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import io_callback
+
+from repro.core.database import SurrogateDB
+from repro.core.engine import InferenceEngine
+from repro.core.functor import TensorFunctor
+from repro.core.tensor_map import TensorMap
+
+
+def _is_traced(*arrays):
+    return any(isinstance(x, jax.core.Tracer)
+               for a in arrays for x in jax.tree.leaves(a))
+
+
+class MLRegion:
+    def __init__(self, name: str, fn: Callable, *,
+                 inputs: Dict[str, Tuple[TensorFunctor, dict]],
+                 outputs: Dict[str, Tuple[TensorFunctor, dict]],
+                 mode: str = "predicated",
+                 model: Optional[str] = None,
+                 database: Optional[str] = None):
+        assert mode in ("collect", "infer", "predicated")
+        self.name, self.fn, self.mode = name, fn, mode
+        self.inputs, self.outputs = inputs, outputs
+        self.model_path = model
+        self.db = (database if isinstance(database, SurrogateDB)
+                   else SurrogateDB(database)) if database else None
+        self._engine: Optional[InferenceEngine] = None
+
+    # ------------------------------------------------------ data bridge ---
+    def bridge_in(self, arrays: dict):
+        """App memory -> model input tensor [sweep..., features]."""
+        parts = []
+        for name, (functor, ranges) in self.inputs.items():
+            tm = TensorMap(functor, arrays[name], ranges, "to")
+            parts.append(tm.to_tensor())
+        t = parts[0] if len(parts) == 1 else jnp.concatenate(
+            [p.reshape(p.shape[:1] + (-1,)) if p.ndim > 1 else p[:, None]
+             for p in parts], axis=-1)
+        return t
+
+    def bridge_out_tensors(self, out_arrays: dict):
+        parts = []
+        for name, (functor, ranges) in self.outputs.items():
+            tm = TensorMap(functor, out_arrays[name], ranges, "to")
+            parts.append(tm.to_tensor())
+        return parts[0] if len(parts) == 1 else jnp.concatenate(
+            [p.reshape(p.shape[:1] + (-1,)) for p in parts], axis=-1)
+
+    def bridge_from(self, tensor, arrays: dict):
+        """Model output tensor -> app memory (through the out functors).
+
+        Pure outputs (not also region inputs) get a synthesized zero
+        template covering exactly the functor's written window.
+        """
+        out = {}
+        offset = 0
+        for name, (functor, ranges) in self.outputs.items():
+            if name in arrays:
+                template = arrays[name]
+            else:
+                probe = TensorMap(functor, None, ranges, "from")
+                template = jnp.zeros(probe.min_array_shape(), tensor.dtype)
+            tm = TensorMap(functor, template, ranges, "from")
+            want = tm.tensor_shape
+            n = int(np.prod(want[len(want) - _feat_dims(tm):])) if want else 1
+            if len(self.outputs) == 1:
+                piece = tensor.reshape(want)
+            else:
+                flatfeat = tensor.reshape(tensor.shape[0], -1)
+                piece = flatfeat[:, offset:offset + n].reshape(want)
+                offset += n
+            out[name] = tm.from_tensor(piece)
+        return out
+
+    # ------------------------------------------------------- execution ----
+    def engine(self) -> InferenceEngine:
+        if self._engine is None:
+            assert self.model_path, f"region {self.name}: no model path"
+            self._engine = InferenceEngine.get(self.model_path)
+        return self._engine
+
+    def _infer(self, arrays: dict):
+        X = self.bridge_in(arrays)
+        eng = self.engine()
+        in_shape = tuple(eng.spec["in_shape"])
+        Xb = X.reshape((-1,) + in_shape[1:])
+        Y = eng(Xb.astype(jnp.float32))
+        return self.bridge_from(Y, arrays)
+
+    def _n_sweep(self) -> int:
+        functor = next(iter(self.inputs.values()))[0]
+        return len(functor.sweep_symbols)
+
+    def _rows(self, X):
+        """DB row layout (paper §V-B): outer dim = unique data identifier.
+
+        One sweep dim (e.g. pose/option index): each sweep entry is a row.
+        Spatial sweeps (stencils): the whole tensor is one row.
+        """
+        X = np.asarray(X)
+        if self._n_sweep() <= 1:
+            return X.reshape(X.shape[0], -1) if X.ndim > 1 else X[:, None]
+        return X[None]
+
+    def _accurate(self, arrays: dict, collect: bool):
+        if collect and not _is_traced(arrays):
+            # eager: exact wall-clock of the accurate path (paper Table III)
+            X = np.asarray(self.bridge_in(arrays))
+            t0 = time.perf_counter()
+            outs = self.fn(**arrays)
+            jax.block_until_ready(outs)
+            dt = time.perf_counter() - t0
+            Y = np.asarray(self.bridge_out_tensors(outs))
+            self.db.group(self.name).append(self._rows(X), self._rows(Y), dt)
+            return outs
+        outs = self.fn(**arrays)
+        if collect:
+            X = self.bridge_in(arrays)
+            Y = self.bridge_out_tensors(outs)
+
+            def tap(xv, yv):
+                self.db.group(self.name).append(self._rows(xv),
+                                                self._rows(yv), float("nan"))
+                return np.int32(0)
+
+            io_callback(tap, jax.ShapeDtypeStruct((), jnp.int32), X, Y,
+                        ordered=True)
+        return outs
+
+    def __call__(self, predicate=None, **arrays):
+        mode = self.mode
+        if mode == "collect":
+            return self._accurate(arrays, collect=True)
+        if mode == "infer":
+            return self._infer(arrays)
+        # predicated: true -> inference, false -> accurate (+collection)
+        assert predicate is not None, "predicated region needs a predicate"
+        if not _is_traced(arrays) and not isinstance(predicate, jax.core.Tracer):
+            return (self._infer(arrays) if bool(predicate)
+                    else self._accurate(arrays, collect=self.db is not None))
+        # traced: both paths in one program
+        names = list(self.outputs.keys())
+
+        def t_inf(arr):
+            return tuple(self._infer(arr)[n] for n in names)
+
+        def t_acc(arr):
+            outs = self.fn(**arr)
+            return tuple(outs[n] for n in names)
+
+        res = jax.lax.cond(predicate, t_inf, t_acc, arrays)
+        return dict(zip(names, res))
+
+
+def _feat_dims(tm: TensorMap) -> int:
+    _, feat = tm._lhs_dims()
+    return len(feat)
+
+
+def approx_ml(fn=None, **kw) -> MLRegion:
+    """Factory mirroring the ``#pragma approx ml(...)`` clause."""
+    name = kw.pop("name", getattr(fn, "__name__", "region"))
+    return MLRegion(name, fn, **kw)

@@ -1,0 +1,20 @@
+"""jit'd wrapper: Pallas flash kernel on TPU, oracle elsewhere."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_offset",
+                                             "force_kernel"))
+def flash_attention_op(q, k, v, *, causal=True, q_offset=0,
+                       force_kernel=False):
+    on_tpu = jax.default_backend() == "tpu"
+    if force_kernel or on_tpu:
+        return flash_attention(q, k, v, causal=causal, q_offset=q_offset,
+                               interpret=not on_tpu)
+    return flash_attention_ref(q, k, v, causal=causal, q_offset=q_offset)

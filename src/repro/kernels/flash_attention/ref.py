@@ -1,0 +1,28 @@
+"""Naive softmax oracle for flash_attention (GQA via kv repeat)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, q_offset=0,
+                        kv_valid_len=None):
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    group = H // KV
+    kr = jnp.repeat(k, group, axis=2)
+    vr = jnp.repeat(v, group, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / (hd ** 0.5)
+    k_pos = jnp.arange(Skv)
+    valid = Skv if kv_valid_len is None else kv_valid_len
+    mask = k_pos[None, :] < valid
+    if causal:
+        q_pos = jnp.arange(Sq) + q_offset
+        mask = mask & (k_pos[None, :] <= q_pos[:, None])
+    else:
+        mask = jnp.broadcast_to(mask, (Sq, Skv))
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
+    return o.astype(q.dtype)

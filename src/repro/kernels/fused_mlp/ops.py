@@ -1,0 +1,42 @@
+"""jit'd wrapper + spec adapter for the inference engine."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.fused_mlp.fused_mlp import fits_vmem, fused_mlp
+from repro.kernels.fused_mlp.ref import fused_mlp_ref
+
+
+def fused_mlp_op(x, weights, biases, acts, *, force_kernel=False):
+    widths = [weights[0].shape[0]] + [w.shape[1] for w in weights]
+    on_tpu = jax.default_backend() == "tpu"
+    if (force_kernel or on_tpu) and fits_vmem(widths):
+        return fused_mlp(x, weights, biases, acts, interpret=not on_tpu)
+    return fused_mlp_ref(x, weights, biases, acts)
+
+
+def fused_mlp_from_spec(spec, params, x):
+    """Adapter: run a pure-dense Sequential bundle through the kernel.
+
+    Layer spec pattern: dense [act] dense [act] ... ; activations between
+    denses become the per-layer act, trailing dense gets 'identity'.
+    """
+    weights, biases, acts = [], [], []
+    import jax.numpy as jnp
+    pending_w = None
+    for layer_spec, p in zip(spec["layers"], params):
+        if layer_spec["kind"] == "dense":
+            if pending_w is not None:
+                acts.append("identity")
+            weights.append(p["w"])
+            biases.append(p.get("b", jnp.zeros((p["w"].shape[1],),
+                                               p["w"].dtype)))
+            pending_w = True
+        elif layer_spec["kind"] == "act":
+            acts.append(layer_spec["name"])
+            pending_w = None
+        elif layer_spec["kind"] == "flatten":
+            x = x.reshape(x.shape[0], -1)
+    if pending_w is not None:
+        acts.append("identity")
+    return fused_mlp_op(x, weights, biases, acts)

@@ -1,0 +1,14 @@
+"""jit'd wrapper: Pallas kernel on TPU, sequential oracle elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rwkv6_chunk.ref import rwkv6_chunk_ref
+from repro.kernels.rwkv6_chunk.rwkv6_chunk import rwkv6_chunk
+
+
+def rwkv6_chunk_op(r, k, v, w, u, s0, *, force_kernel=False):
+    on_tpu = jax.default_backend() == "tpu"
+    if force_kernel or on_tpu:
+        return rwkv6_chunk(r, k, v, w, u, s0, interpret=not on_tpu)
+    return rwkv6_chunk_ref(r, k, v, w, u, s0)

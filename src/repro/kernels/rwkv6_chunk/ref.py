@@ -1,0 +1,22 @@
+"""Pure-jnp sequential oracle for the RWKV6 WKV recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_chunk_ref(r, k, v, w, u, s0):
+    """r,k,v,w: [B,T,H,hd]; u: [H,hd]; s0: [B,H,hd,hd] (f32)."""
+    rf, kf, vf, wf = (t.astype(jnp.float32).transpose(1, 0, 2, 3)
+                      for t in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs
+        kv = kt[..., :, None] * vt[..., None, :]  # [B,H,hd,hd]
+        o = jnp.einsum("bhi,bhij->bhj", rt, S + uf[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, o
+
+    sT, o = jax.lax.scan(step, s0.astype(jnp.float32), (rf, kf, vf, wf))
+    return o.transpose(1, 0, 2, 3).astype(r.dtype), sT

@@ -1,0 +1,29 @@
+"""jit'd public wrapper: picks the Pallas kernel on TPU, oracle elsewhere."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.stencil_gather.ref import stencil_gather_ref
+from repro.kernels.stencil_gather.stencil_gather import stencil_gather
+
+
+@functools.partial(jax.jit, static_argnames=("offsets", "out_h", "out_w",
+                                             "origin", "force_kernel"))
+def stencil_gather_op(x, *, offsets, out_h, out_w, origin=(0, 0),
+                      force_kernel=False):
+    offsets = tuple(tuple(o) for o in offsets)
+    if force_kernel or jax.default_backend() == "tpu":
+        return stencil_gather(x, offsets, out_h, out_w, origin=origin,
+                              interpret=jax.default_backend() != "tpu")
+    return stencil_gather_ref(x, offsets, out_h, out_w, origin=origin)
+
+
+def functor_offsets(tensor_map):
+    """Extract static (dy, dx) offsets from a 2-D point-slice TensorMap."""
+    offs = []
+    for desc in tensor_map.descriptors:
+        for eo in desc.elem_offsets:
+            offs.append((desc.offsets[0] + eo[0], desc.offsets[1] + eo[1]))
+    return tuple(offs)

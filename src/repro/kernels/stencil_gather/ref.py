@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for stencil_gather (also the portable TensorMap path)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def stencil_gather_ref(x, offsets, out_h, out_w, *, origin=(0, 0)):
+    feats = []
+    for dy, dx in offsets:
+        i0 = origin[0] + dy
+        j0 = origin[1] + dx
+        feats.append(x[i0:i0 + out_h, j0:j0 + out_w])
+    return jnp.stack(feats, axis=-1)

@@ -1,0 +1,41 @@
+"""Production mesh builders.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.  The single-pod mesh is 16x16 = 256 chips
+(one v5e pod slice); multi-pod stacks a leading ``pod`` axis (2 pods = 512
+chips) used for data parallelism across the inter-pod (DCN/ICI-expanded)
+links.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = 1
+    for s in shape:
+        ndev *= s
+    devices = jax.devices()[:ndev]
+    if len(devices) < ndev:
+        raise RuntimeError(
+            f"need {ndev} devices for the production mesh, have "
+            f"{len(devices)}; run under dryrun.py which forces 512 host "
+            f"platform devices")
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.asarray(devices).reshape(shape), axes,
+        axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(shape=None, axes=("data", "model")):
+    """Smoke/test mesh over whatever devices exist (usually 1 CPU)."""
+    import numpy as np
+    n = len(jax.devices())
+    if shape is None:
+        shape = (n, 1)
+    return jax.sharding.Mesh(
+        np.asarray(jax.devices()[:shape[0] * shape[1]]).reshape(shape), axes,
+        axis_types=(AxisType.Auto,) * len(axes))

@@ -1,0 +1,127 @@
+"""ShapeDtypeStruct stand-ins + sharded step builders for every cell.
+
+``input_specs(cfg, shape)`` provides weak-type-correct, shardable
+ShapeDtypeStructs for every model input — no device allocation.  Modality
+frontends are stubs per the assignment: whisper gets precomputed frame
+embeddings [B, enc_ctx, d_model]; qwen2-vl gets 3-component M-RoPE position
+ids alongside the token stream.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.dist.sharding import (ShardCtx, cache_spec_tree, param_spec_tree)
+from repro.models import lm
+from repro.train import trainer
+
+
+def _sds(shape, dtype, mesh, spec):
+    sharding = NamedSharding(mesh, spec) if mesh is not None else None
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _attach(shapes, specs, mesh):
+    return jax.tree.map(
+        lambda s, sp: _sds(s.shape, s.dtype, mesh, sp), shapes, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell, mesh=None,
+                multi_pod: bool = False) -> dict:
+    """Batch-input ShapeDtypeStructs for one cell (no params/caches)."""
+    ctx = ShardCtx(mesh, multi_pod)
+    GB, S = shape.global_batch, shape.seq_len
+    tok_spec = ctx.spec_for((GB, S), ("batch", None)) if mesh else P()
+    out = {}
+    if shape.kind == "train":
+        out["tokens"] = _sds((GB, S), jnp.int32, mesh, tok_spec)
+        out["targets"] = _sds((GB, S), jnp.int32, mesh, tok_spec)
+    elif shape.kind == "prefill":
+        out["tokens"] = _sds((GB, S), jnp.int32, mesh, tok_spec)
+    else:  # decode
+        one = ctx.spec_for((GB, 1), ("batch", None)) if mesh else P()
+        out["tokens"] = _sds((GB, 1), jnp.int32, mesh, one)
+    Sx = out["tokens"].shape[1]
+    if cfg.needs_position_ids:
+        pid_spec = ctx.spec_for((3, GB, Sx), (None, "batch", None)) if mesh else P()
+        out["position_ids"] = _sds((3, GB, Sx), jnp.int32, mesh, pid_spec)
+    if cfg.enc_dec:
+        esp = (ctx.spec_for((GB, cfg.enc_ctx, cfg.d_model),
+                            ("batch", None, None)) if mesh else P())
+        out["enc_embeds"] = _sds((GB, cfg.enc_ctx, cfg.d_model), cfg.jdtype,
+                                 mesh, esp)
+    return out
+
+
+def _param_sds(cfg, mesh, multi_pod):
+    shapes = jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+    specs = param_spec_tree(shapes, cfg, mesh, multi_pod)
+    return _attach(shapes, specs, mesh)
+
+
+def _state_sds(cfg, mesh, multi_pod):
+    shapes = jax.eval_shape(
+        lambda: trainer.make_train_state(jax.random.PRNGKey(0), cfg))
+    specs = param_spec_tree(shapes, cfg, mesh, multi_pod)
+    return _attach(shapes, specs, mesh)
+
+
+def _cache_sds(cfg, shape, params_sds, batch_in, mesh, multi_pod, long_ctx):
+    GB, S = shape.global_batch, shape.seq_len
+
+    def build(p, enc):
+        enc_out = lm.encode(cfg, p, enc) if cfg.enc_dec else None
+        return lm.init_caches(cfg, GB, S, cfg.jdtype, enc_out=enc_out,
+                              params=p if cfg.enc_dec else None)
+
+    if cfg.enc_dec:
+        shapes = jax.eval_shape(build, params_sds, batch_in["enc_embeds"])
+    else:
+        shapes = jax.eval_shape(lambda p: build(p, None), params_sds)
+    specs = cache_spec_tree(shapes, cfg, mesh, multi_pod, long_ctx=long_ctx)
+    return _attach(shapes, specs, mesh)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeCell, mesh=None,
+               multi_pod: bool = False) -> dict:
+    """Returns fn/args/donate/out_shardings for jit().lower() of one cell."""
+    batch_in = input_specs(cfg, shape, mesh, multi_pod)
+    long_ctx = shape.name.startswith("long")
+
+    if shape.kind == "train":
+        state = _state_sds(cfg, mesh, multi_pod)
+
+        def fn(st, batch):
+            return trainer.train_step(cfg, st, batch)
+
+        out_shardings = None
+        if mesh is not None:
+            out_shardings = (jax.tree.map(lambda x: x.sharding, state), None)
+        return dict(fn=fn, args=(state, batch_in), donate=(0,),
+                    out_shardings=out_shardings)
+
+    params = _param_sds(cfg, mesh, multi_pod)
+    if shape.kind == "prefill":
+        def fn(p, batch):
+            return lm.prefill(cfg, p, batch["tokens"],
+                              position_ids=batch.get("position_ids"),
+                              enc_embeds=batch.get("enc_embeds"))
+        return dict(fn=fn, args=(params, batch_in), donate=(), out_shardings=None)
+
+    # decode
+    caches = _cache_sds(cfg, shape, params, batch_in, mesh, multi_pod, long_ctx)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def fn(p, c, batch, pos_):
+        return lm.serve_step(cfg, p, c, batch["tokens"], pos_,
+                             position_ids=batch.get("position_ids"),
+                             long_ctx=long_ctx)
+
+    out_shardings = None
+    if mesh is not None:
+        out_shardings = (None, jax.tree.map(lambda x: x.sharding, caches))
+    return dict(fn=fn, args=(params, caches, batch_in, pos), donate=(1,),
+                out_shardings=out_shardings)

@@ -1,0 +1,107 @@
+"""Attention compute: chunked (flash-style) softmax in pure JAX.
+
+This is the portable implementation and the oracle for
+``repro.kernels.flash_attention``.  KV is processed in ``chunk``-sized
+blocks with a running max / denominator (online softmax), so live memory
+is O(Sq * chunk) instead of O(Sq * Skv) — the difference between a 32k
+prefill fitting in VMEM-era HBM budgets or not.
+
+All inputs are [B, S, H, hd]; GQA callers repeat KV heads to H before
+calling (the Pallas kernel handles groups natively; see kernels/).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def chunked_attention(q, k, v, *, causal: bool, chunk: int = 1024,
+                      q_offset=0, kv_valid_len=None, unroll: bool = False):
+    """Online-softmax attention.
+
+    q: [B, Sq, H, hd]; k, v: [B, Skv, H, hd].
+    causal: mask k_pos > q_pos (+q_offset shifts q positions).
+    kv_valid_len: optional scalar; positions >= it are masked (KV caches).
+    Returns [B, Sq, H, hd] in q.dtype.
+    """
+    B, Sq, H, hd = q.shape
+    vd = v.shape[-1]  # may differ from hd (MLA: qk 192, v 128)
+    Skv = k.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+    nchunk = -(-Skv // chunk)
+    pad = nchunk * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, nchunk, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nchunk, chunk, H, vd).transpose(1, 0, 2, 3, 4)
+
+    q_pos = jnp.arange(Sq) + q_offset  # [Sq]
+    valid = Skv if kv_valid_len is None else kv_valid_len
+
+    qf = q.astype(jnp.float32)
+
+    def body(carry, xs):
+        acc, m, l, ci = carry
+        kb, vb = xs  # [B, chunk, H, hd]
+        k_pos = ci * chunk + jnp.arange(chunk)  # [chunk]
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb.astype(jnp.float32)) * scale
+        mask = (k_pos[None, :] < valid)
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        else:
+            mask = jnp.broadcast_to(mask, (Sq, chunk))
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))  # [B,H,Sq]
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        # probs stored bf16 (exp/max/sum stats stay f32): halves the live
+        # score-block footprint; matches what the Pallas flash kernel keeps
+        # in VMEM.
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(jnp.bfloat16), vb,
+            preferred_element_type=jnp.float32)
+        return (acc_new, m_new, l_new, ci + 1), None
+
+    acc0 = jnp.zeros((B, H, Sq, vd), jnp.float32)
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    # unroll=True is used by the dry-run calibration compiles only: XLA's
+    # cost_analysis counts a while body once, so exact FLOP accounting
+    # needs the chunks inlined.  Production keeps the while loop so buffer
+    # assignment reuses one score block.
+    (acc, m, l, _), _ = jax.lax.scan(body, (acc0, m0, l0, 0), (kc, vc),
+                                     unroll=bool(unroll))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def full_attention(q, k, v, *, causal: bool, q_offset=0, kv_valid_len=None):
+    """Plain softmax attention (decode path / oracle)."""
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    k_pos = jnp.arange(Skv)
+    valid = Skv if kv_valid_len is None else kv_valid_len
+    mask = k_pos[None, :] < valid
+    if causal:
+        q_pos = jnp.arange(Sq) + q_offset
+        mask = mask & (k_pos[None, :] <= q_pos[:, None])
+    else:
+        mask = jnp.broadcast_to(mask, (Sq, Skv))
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bhqd", p, v.astype(jnp.float32))
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def repeat_kv(k, n_rep: int, target_heads: int):
+    """Broadcast KV heads to (padded) query head count via gather."""
+    B, S, KV, hd = k.shape
+    idx = jnp.minimum(jnp.arange(target_heads) // n_rep, KV - 1)
+    return jnp.take(k, idx, axis=2)

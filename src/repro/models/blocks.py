@@ -1,0 +1,816 @@
+"""Layer blocks: GQA / MLA / RWKV6 / Mamba mixers + dense / GLU / MoE MLPs.
+
+Every mixer exposes:
+  ``<name>_init(rng, cfg, cross=False)``      -> param dict
+  ``<name>_seq(cfg, p, x, ...)``              -> (y, final_state_or_cache)
+  ``<name>_step(cfg, p, x, state, pos, ...)`` -> (y, new_state)
+and an ``init_state(cfg, batch, cache_len)`` shape helper used by the
+serving layer.  State/caches are explicit pytrees so `lax.scan` can thread
+them through the layer stack.
+
+Recurrent mixers (RWKV6, Mamba) run exact chunked scans for full sequences:
+an outer `lax.scan` over chunks carries the recurrent state; within a chunk
+`jax.lax.associative_scan` computes all intermediate states in O(log c)
+passes.  This bounds live memory to O(chunk * state) and avoids the
+log-space pairwise overflow of decay-product formulations.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import constrain
+from repro.models import attention as attn_lib
+from repro.models import rope as rope_lib
+
+
+def _dense_init(rng, shape, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(shape[0])
+    return (jax.random.normal(rng, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- norms ----
+def norm_init(cfg, rng=None):
+    p = {"scale": jnp.ones((cfg.d_model,), cfg.jdtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), cfg.jdtype)
+    return p
+
+
+def apply_norm(cfg, p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_head(x, scale, eps=1e-6):
+    """Per-head RMS norm (qwen3 qk_norm)."""
+    xf = x.astype(jnp.float32)
+    ms = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _act(name):
+    return jax.nn.silu if name == "silu" else jax.nn.gelu
+
+
+# ------------------------------------------------------------ GQA mixer ----
+def gqa_init(rng, cfg, cross=False):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(rng, 6)
+    p = {
+        "wq": _dense_init(ks[0], (d, H * hd), cfg.jdtype),
+        "wk": _dense_init(ks[1], (d, KV * hd), cfg.jdtype),
+        "wv": _dense_init(ks[2], (d, KV * hd), cfg.jdtype),
+        "wo": _dense_init(ks[3], (H * hd, d), cfg.jdtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), cfg.jdtype)
+        p["bk"] = jnp.zeros((KV * hd,), cfg.jdtype)
+        p["bv"] = jnp.zeros((KV * hd,), cfg.jdtype)
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((hd,), cfg.jdtype)
+        p["k_norm"] = jnp.ones((hd,), cfg.jdtype)
+    return p
+
+
+def _padded_heads(cfg, tp=16):
+    H = cfg.n_heads
+    return ((H + tp - 1) // tp) * tp if H % tp else H
+
+
+def _project_qkv(cfg, p, xq, xkv, positions, position_ids=None, rope=True):
+    B, Sq, _ = xq.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = xq @ p["wq"]
+    k = xkv @ p["wk"]
+    v = xkv @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, Sq, H, hd)
+    k = k.reshape(B, xkv.shape[1], KV, hd)
+    v = v.reshape(B, xkv.shape[1], KV, hd)
+    if cfg.qk_norm and "q_norm" in p:
+        q = rms_head(q, p["q_norm"])
+        k = rms_head(k, p["k_norm"])
+    if rope and cfg.rope == "rope":
+        q = rope_lib.apply_rope(q, positions, cfg.rope_theta)
+        kpos = positions if xkv is xq else jnp.arange(k.shape[1])
+        k = rope_lib.apply_rope(k, kpos, cfg.rope_theta)
+    elif rope and cfg.rope == "mrope":
+        q = rope_lib.apply_mrope(q, position_ids, cfg.rope_theta, cfg.mrope_sections)
+        k = rope_lib.apply_mrope(k, position_ids, cfg.rope_theta, cfg.mrope_sections)
+    return q, k, v
+
+
+def gqa_seq(cfg, p, x, *, positions, position_ids=None, causal=True,
+            cross_kv=None, cache_len=None):
+    """Full-sequence attention. Returns (y, kv) where kv = (k, v) for caching."""
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if cross_kv is not None:
+        k, v = cross_kv
+        q = (x @ p["wq"] + (p["bq"] if cfg.qkv_bias else 0)).reshape(B, S, H, hd)
+        causal = False
+    else:
+        q, k, v = _project_qkv(cfg, p, x, x, positions, position_ids)
+    kv_out = (k, v)
+    Hp = _padded_heads(cfg)
+    if Hp != H:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Hp - H), (0, 0)))
+    q = constrain(q, "batch", None, "heads", None)
+    k_r = attn_lib.repeat_kv(k, max(1, H // KV), Hp)
+    v_r = attn_lib.repeat_kv(v, max(1, H // KV), Hp)
+    k_r = constrain(k_r, "batch", None, "heads", None)
+    v_r = constrain(v_r, "batch", None, "heads", None)
+    if S * k.shape[1] > 4096 * 4096 // 4:
+        o = attn_lib.chunked_attention(q, k_r, v_r, causal=causal,
+                                       chunk=cfg.attn_chunk,
+                                       unroll=cfg.unroll_inner)
+    else:
+        o = attn_lib.full_attention(q, k_r, v_r, causal=causal)
+    if Hp != H:
+        o = o[:, :, :H]
+    o = o.reshape(B, S, H * hd)
+    y = o @ p["wo"]
+    return y, kv_out
+
+
+def gqa_init_cache(cfg, batch, cache_len, dtype):
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    if cfg.kv_cache_dtype == "int8":
+        return {
+            "k": jnp.zeros((batch, cache_len, KV, hd), jnp.int8),
+            "v": jnp.zeros((batch, cache_len, KV, hd), jnp.int8),
+            "k_scale": jnp.zeros((batch, cache_len, KV), jnp.bfloat16),
+            "v_scale": jnp.zeros((batch, cache_len, KV), jnp.bfloat16),
+        }
+    return {
+        "k": jnp.zeros((batch, cache_len, KV, hd), dtype),
+        "v": jnp.zeros((batch, cache_len, KV, hd), dtype),
+    }
+
+
+def _quantize_kv(t):
+    """Per-(token, head) int8 symmetric quantization. t: [B,S,KV,hd]."""
+    scale = jnp.maximum(jnp.abs(t.astype(jnp.float32)).max(-1), 1e-6) / 127.0
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def _int8_decode_attention(cfg, q, kq, vq, ks, vs, valid, *, chunk=2048):
+    """Online-softmax decode attention with in-loop int8 dequant.
+
+    q: [B,1,H,hd]; kq/vq: [B,S,KV,hd] int8; ks/vs: [B,S,KV] scales.
+    The full bf16 cache is never materialized — each chunk dequantizes in
+    VMEM-sized blocks (mirrors what a fused TPU kernel does).
+    """
+    B, _, H, hd = q.shape
+    S, KV = kq.shape[1], kq.shape[2]
+    n_rep = max(1, H // KV)
+    scale = 1.0 / (hd ** 0.5)
+    nchunk = max(1, S // chunk)
+    chunk = S // nchunk
+    qf = q.astype(jnp.float32)
+
+    def body(carry, ci):
+        acc, m, l = carry
+        sl = ci * chunk
+        kb = jax.lax.dynamic_slice_in_dim(kq, sl, chunk, 1)
+        vb = jax.lax.dynamic_slice_in_dim(vq, sl, chunk, 1)
+        ksb = jax.lax.dynamic_slice_in_dim(ks, sl, chunk, 1)
+        vsb = jax.lax.dynamic_slice_in_dim(vs, sl, chunk, 1)
+        kd = kb.astype(jnp.bfloat16) * ksb[..., None].astype(jnp.bfloat16)
+        vd = vb.astype(jnp.bfloat16) * vsb[..., None].astype(jnp.bfloat16)
+        kd = attn_lib.repeat_kv(kd, n_rep, H)
+        vd = attn_lib.repeat_kv(vd, n_rep, H)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kd.astype(jnp.float32)) * scale
+        pos = sl + jnp.arange(chunk)
+        s = jnp.where((pos < valid)[None, None, None, :], s, attn_lib.NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(jnp.bfloat16), vd,
+            preferred_element_type=jnp.float32)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, H, 1, hd), jnp.float32)
+    m0 = jnp.full((B, H, 1), attn_lib.NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, 1), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), jnp.arange(nchunk),
+                                  unroll=bool(cfg.unroll_inner))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def gqa_step(cfg, p, x, cache, pos, *, position_ids=None, cross_kv=None,
+             long_ctx=False):
+    """Single-token decode. x: [B, 1, D]; cache k/v: [B, S, KV, hd]."""
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    seq_ax = "longseq" if long_ctx else "kvseq"
+    if cross_kv is not None:
+        k, v = cross_kv
+        q = (x @ p["wq"] + (p["bq"] if cfg.qkv_bias else 0)).reshape(B, 1, H, hd)
+        valid = k.shape[1]
+        new_cache = cache
+    else:
+        pos_arr = jnp.full((1,), pos, jnp.int32)
+        pid = None
+        if cfg.rope == "mrope":
+            pid = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (3, B, 1)) \
+                if position_ids is None else position_ids
+        q, k_new, v_new = _project_qkv(cfg, p, x, x, pos_arr, pid)
+        if cfg.kv_cache_dtype == "int8":
+            kq, ks_new = _quantize_kv(k_new)
+            vq, vs_new = _quantize_kv(v_new)
+            kc = jax.lax.dynamic_update_slice(cache["k"], kq, (0, pos, 0, 0))
+            vc = jax.lax.dynamic_update_slice(cache["v"], vq, (0, pos, 0, 0))
+            ks = jax.lax.dynamic_update_slice(cache["k_scale"], ks_new,
+                                              (0, pos, 0))
+            vs = jax.lax.dynamic_update_slice(cache["v_scale"], vs_new,
+                                              (0, pos, 0))
+            kc = constrain(kc, "batch", seq_ax, None, None)
+            vc = constrain(vc, "batch", seq_ax, None, None)
+            ks = constrain(ks, "batch", seq_ax, None)
+            vs = constrain(vs, "batch", seq_ax, None)
+            new_cache = {"k": kc, "v": vc, "k_scale": ks, "v_scale": vs}
+            # shard-local dequant (measured best: chunked slices over the
+            # seq-sharded cache regress 14x — see EXPERIMENTS.md §Perf B2)
+            k = kc.astype(jnp.bfloat16) * ks[..., None].astype(jnp.bfloat16)
+            v = vc.astype(jnp.bfloat16) * vs[..., None].astype(jnp.bfloat16)
+            k = constrain(k, "batch", seq_ax, None, None)
+            v = constrain(v, "batch", seq_ax, None, None)
+        else:
+            k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, pos, 0, 0))
+            v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, pos, 0, 0))
+            k = constrain(k, "batch", seq_ax, None, None)
+            v = constrain(v, "batch", seq_ax, None, None)
+            new_cache = {"k": k, "v": v}
+        valid = pos + 1
+    k_r = attn_lib.repeat_kv(k, max(1, H // KV), H)
+    v_r = attn_lib.repeat_kv(v, max(1, H // KV), H)
+    o = attn_lib.full_attention(q, k_r, v_r, causal=False, kv_valid_len=valid)
+    y = o.reshape(B, 1, H * hd) @ p["wo"]
+    return y, new_cache
+
+
+# ------------------------------------------------------------ MLA mixer ----
+def mla_init(rng, cfg, cross=False):
+    d, H = cfg.d_model, cfg.n_heads
+    r = cfg.kv_lora_rank
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    ks = jax.random.split(rng, 5)
+    return {
+        "w_q": _dense_init(ks[0], (d, H * qk), cfg.jdtype),
+        "w_dkv": _dense_init(ks[1], (d, r), cfg.jdtype),
+        "w_kr": _dense_init(ks[2], (d, cfg.qk_rope_dim), cfg.jdtype),
+        "w_ukv": _dense_init(ks[3], (r, H * (cfg.qk_nope_dim + cfg.v_head_dim)), cfg.jdtype),
+        "wo": _dense_init(ks[4], (H * cfg.v_head_dim, d), cfg.jdtype),
+        "ckv_norm": jnp.ones((r,), cfg.jdtype),
+    }
+
+
+def _mla_q(cfg, p, x, positions):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    nope, rdim = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = (x @ p["w_q"]).reshape(B, S, H, nope + rdim)
+    qn, qr = q[..., :nope], q[..., nope:]
+    qr = rope_lib.apply_rope(qr, positions, cfg.rope_theta)
+    return qn, qr
+
+
+def _rms_vec(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    ms = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def mla_seq(cfg, p, x, *, positions, position_ids=None, causal=True,
+            cross_kv=None, cache_len=None):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    nope, rdim, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    qn, qr = _mla_q(cfg, p, x, positions)
+    ckv = _rms_vec(x @ p["w_dkv"], p["ckv_norm"])  # [B,S,r]
+    kr = rope_lib.apply_rope((x @ p["w_kr"])[:, :, None, :], positions,
+                             cfg.rope_theta)  # [B,S,1,rdim]
+    kv = (ckv @ p["w_ukv"]).reshape(B, S, H, nope + vd)
+    kn, v = kv[..., :nope], kv[..., nope:]
+    q = jnp.concatenate([qn, qr], axis=-1)
+    k = jnp.concatenate([kn, jnp.broadcast_to(kr, (B, S, H, rdim))], axis=-1)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "heads", None)
+    if S * S > 4096 * 4096 // 4:
+        o = attn_lib.chunked_attention(q, k, v, causal=causal,
+                                       chunk=cfg.attn_chunk,
+                                       unroll=cfg.unroll_inner)
+    else:
+        o = attn_lib.full_attention(q, k, v, causal=causal)
+    y = o.reshape(B, S, H * vd) @ p["wo"]
+    return y, (ckv, kr[:, :, 0, :])
+
+
+def mla_init_cache(cfg, batch, cache_len, dtype):
+    return {
+        "ckv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
+        "kr": jnp.zeros((batch, cache_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_step(cfg, p, x, cache, pos, *, position_ids=None, cross_kv=None,
+             long_ctx=False):
+    """Absorbed-matmul MLA decode: scores/values live in kv_lora space."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    nope, rdim, vd, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    pos_arr = jnp.full((1,), pos, jnp.int32)
+    qn, qr = _mla_q(cfg, p, x, pos_arr)  # [B,1,H,*]
+    ckv_new = _rms_vec(x @ p["w_dkv"], p["ckv_norm"])
+    kr_new = rope_lib.apply_rope((x @ p["w_kr"])[:, :, None, :], pos_arr,
+                                 cfg.rope_theta)[:, :, 0, :]
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_new, (0, pos, 0))
+    kr = jax.lax.dynamic_update_slice(cache["kr"], kr_new, (0, pos, 0))
+    seq_ax = "longseq" if long_ctx else "kvseq"
+    ckv = constrain(ckv, "batch", seq_ax, None)
+    kr = constrain(kr, "batch", seq_ax, None)
+    w_uk = p["w_ukv"].reshape(r, H, nope + vd)[:, :, :nope]  # [r,H,nope]
+    w_uv = p["w_ukv"].reshape(r, H, nope + vd)[:, :, nope:]  # [r,H,vd]
+    q_lat = jnp.einsum("bqhn,rhn->bqhr", qn.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))  # [B,1,H,r]
+    s = jnp.einsum("bqhr,bsr->bhqs", q_lat, ckv.astype(jnp.float32))
+    s = s + jnp.einsum("bqhn,bsn->bhqs", qr.astype(jnp.float32),
+                       kr.astype(jnp.float32))
+    s = s / np.sqrt(nope + rdim)
+    valid = jnp.arange(ckv.shape[1]) < (pos + 1)
+    s = jnp.where(valid[None, None, None, :], s, attn_lib.NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", w, ckv.astype(jnp.float32))
+    o = jnp.einsum("bqhr,rhv->bqhv", ctx, w_uv.astype(jnp.float32)).astype(x.dtype)
+    y = o.reshape(B, 1, H * vd) @ p["wo"]
+    return y, {"ckv": ckv, "kr": kr}
+
+
+# ----------------------------------------------------------- RWKV6 mixer ---
+def rwkv6_init(rng, cfg, cross=False):
+    d, ld = cfg.d_model, cfg.rwkv_lora_dim
+    H, hd = cfg.n_rwkv_heads, cfg.rwkv_head_size
+    ks = jax.random.split(rng, 10)
+    decay = -6.0 + 5.0 * (jnp.arange(d) / max(1, d - 1)) ** 0.7
+    return {
+        "mu_base": jnp.full((d,), 0.5, cfg.jdtype),
+        "mu_wkvrg": jnp.full((5, d), 0.5, cfg.jdtype),
+        "lora_a_mix": _dense_init(ks[0], (d, 5 * ld), cfg.jdtype, 0.01),
+        "lora_b_mix": (jax.random.normal(ks[1], (5, ld, d)) * 0.01).astype(cfg.jdtype),
+        "w0": decay.astype(cfg.jdtype),
+        "lora_a_w": _dense_init(ks[2], (d, 2 * ld), cfg.jdtype, 0.01),
+        "lora_b_w": (jax.random.normal(ks[3], (2 * ld, d)) * 0.01).astype(cfg.jdtype),
+        "w_u": (jax.random.normal(ks[4], (H, hd)) * 0.1).astype(cfg.jdtype),
+        "wr_tm": _dense_init(ks[5], (d, d), cfg.jdtype),
+        "wk_tm": _dense_init(ks[6], (d, d), cfg.jdtype),
+        "wv_tm": _dense_init(ks[7], (d, d), cfg.jdtype),
+        "wg_tm": _dense_init(ks[8], (d, d), cfg.jdtype),
+        "wo": _dense_init(ks[9], (d, d), cfg.jdtype),
+        "gn_scale": jnp.ones((d,), cfg.jdtype),
+        "gn_bias": jnp.zeros((d,), cfg.jdtype),
+    }
+
+
+def _rwkv_mix(cfg, p, x, x_prev):
+    """Data-dependent token-shift (Finch ddlerp). Returns xw,xk,xv,xr,xg."""
+    dx = x_prev - x
+    xxx = x + dx * p["mu_base"]
+    mix = jnp.tanh(xxx @ p["lora_a_mix"])
+    B, S, _ = x.shape
+    mix = mix.reshape(B, S, 5, cfg.rwkv_lora_dim)
+    delta = jnp.einsum("bsfl,fld->fbsd", mix, p["lora_b_mix"])
+    outs = []
+    for i in range(5):
+        outs.append(x + dx * (p["mu_wkvrg"][i] + delta[i]))
+    return outs
+
+
+def _rwkv_wkvrg(cfg, p, x, x_prev):
+    xw, xk, xv, xr, xg = _rwkv_mix(cfg, p, x, x_prev)
+    B, S, d = x.shape
+    H, hd = cfg.n_rwkv_heads, cfg.rwkv_head_size
+    r = (xr @ p["wr_tm"]).reshape(B, S, H, hd)
+    k = (xk @ p["wk_tm"]).reshape(B, S, H, hd)
+    v = (xv @ p["wv_tm"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ p["wg_tm"])
+    w_log = -jnp.exp(jnp.clip(
+        p["w0"].astype(jnp.float32)
+        + (jnp.tanh(xw @ p["lora_a_w"][:, :cfg.rwkv_lora_dim * 2].astype(x.dtype))
+           @ p["lora_b_w"].astype(x.dtype)).astype(jnp.float32),
+        -20.0, 1.0))
+    w = jnp.exp(w_log).reshape(B, S, H, hd)  # decay in (0,1)
+    return r, k, v, g, w
+
+
+def _rwkv_groupnorm(cfg, p, o):
+    """Per-head group norm of the wkv output. o: [B,S,H,hd]"""
+    B, S, H, hd = o.shape
+    of = o.astype(jnp.float32)
+    mu = of.mean(-1, keepdims=True)
+    var = ((of - mu) ** 2).mean(-1, keepdims=True)
+    y = ((of - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(B, S, H * hd)
+    y = y * p["gn_scale"].astype(jnp.float32) + p["gn_bias"].astype(jnp.float32)
+    return y
+
+
+def rwkv6_seq(cfg, p, x, *, positions=None, position_ids=None, causal=True,
+              cross_kv=None, cache_len=None, chunk=64, x_prev0=None, S0=None):
+    """Chunked exact WKV scan. Returns (y, state) with state=(S, x_last)."""
+    B, S, d = x.shape
+    H, hd = cfg.n_rwkv_heads, cfg.rwkv_head_size
+    x_prev = jnp.concatenate(
+        [x_prev0[:, None] if x_prev0 is not None else jnp.zeros((B, 1, d), x.dtype),
+         x[:, :-1]], axis=1)
+    r, k, v, g, w = _rwkv_wkvrg(cfg, p, x, x_prev)
+    u = p["w_u"].astype(jnp.float32)
+
+    nchunk = S // chunk if S % chunk == 0 else -(-S // chunk)
+    pad = nchunk * chunk - S
+    if pad:
+        r, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (r, k, v))
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+
+    def to_chunks(t):
+        return t.reshape(B, nchunk, chunk, H, hd).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))
+
+    def chunk_body(S_in, xs):
+        rb, kb, vb, wb = xs  # [B,c,H,hd]
+        a = wb[..., None]                      # diag decay  [B,c,H,hdk,1]
+        b = kb[..., :, None] * vb[..., None, :]  # k (x) v   [B,c,H,hdk,hdv]
+
+        def comb(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        A, Bc = jax.lax.associative_scan(comb, (a, b), axis=1)
+        # state BEFORE t: shift the inclusive scan right by one
+        A_prev = jnp.concatenate([jnp.ones_like(A[:, :1]), A[:, :-1]], axis=1)
+        B_prev = jnp.concatenate([jnp.zeros_like(Bc[:, :1]), Bc[:, :-1]], axis=1)
+        S_prev = A_prev * S_in[:, None] + B_prev  # [B,c,H,hdk,hdv]
+        o = jnp.einsum("bchi,bchij->bchj", rb, S_prev)
+        o = o + jnp.einsum("bchi,bchi,bchj->bchj", rb, u * kb, vb)
+        S_out = A[:, -1] * S_in + Bc[:, -1]
+        return S_out, o
+
+    S_init = (S0 if S0 is not None
+              else jnp.zeros((B, H, hd, hd), jnp.float32))
+    S_fin, o = jax.lax.scan(chunk_body, S_init, (rc, kc, vc, wc))
+    o = o.transpose(1, 0, 2, 3, 4).reshape(B, nchunk * chunk, H, hd)[:, :S]
+    y = _rwkv_groupnorm(cfg, p, o) * g.astype(jnp.float32)
+    y = y.astype(x.dtype) @ p["wo"]
+    return y, {"S": S_fin, "x_last": x[:, -1]}
+
+
+def rwkv6_init_cache(cfg, batch, cache_len, dtype):
+    H, hd = cfg.n_rwkv_heads, cfg.rwkv_head_size
+    return {
+        "S": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "x_last": jnp.zeros((batch, cfg.d_model), dtype),
+    }
+
+
+def rwkv6_step(cfg, p, x, state, pos, *, position_ids=None, cross_kv=None,
+               long_ctx=False):
+    B = x.shape[0]
+    H, hd = cfg.n_rwkv_heads, cfg.rwkv_head_size
+    r, k, v, g, w = _rwkv_wkvrg(cfg, p, x, state["x_last"][:, None])
+    rf, kf, vf, wf = (t.astype(jnp.float32)[:, 0] for t in (r, k, v, w))
+    u = p["w_u"].astype(jnp.float32)
+    S = state["S"]
+    o = jnp.einsum("bhi,bhij->bhj", rf, S) + jnp.einsum(
+        "bhi,bhi,bhj->bhj", rf, u * kf, vf)
+    S_new = wf[..., None] * S + kf[..., None] * vf[..., None, :]
+    y = _rwkv_groupnorm(cfg, p, o[:, None]) * g.astype(jnp.float32)
+    y = y.astype(x.dtype) @ p["wo"]
+    return y, {"S": S_new, "x_last": x[:, 0]}
+
+
+# ----------------------------------------------------------- Mamba mixer ---
+def mamba_init(rng, cfg, cross=False):
+    d, di = cfg.d_model, cfg.mamba_d_inner
+    ds, dc, dr = cfg.mamba_d_state, cfg.mamba_d_conv, cfg.dt_rank
+    ks = jax.random.split(rng, 6)
+    A = jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+    return {
+        "w_in": _dense_init(ks[0], (d, 2 * di), cfg.jdtype),
+        "conv_w": (jax.random.normal(ks[1], (dc, di)) * 0.1).astype(cfg.jdtype),
+        "conv_b": jnp.zeros((di,), cfg.jdtype),
+        "w_x": _dense_init(ks[2], (di, dr + 2 * ds), cfg.jdtype),
+        "w_dt": _dense_init(ks[3], (dr, di), cfg.jdtype),
+        "b_dt": jnp.full((di,), -4.6, cfg.jdtype),  # softplus^-1(0.01)
+        "A_log": jnp.log(A).astype(cfg.jdtype),
+        "D_skip": jnp.ones((di,), cfg.jdtype),
+        "w_out": _dense_init(ks[4], (di, d), cfg.jdtype),
+    }
+
+
+def _mamba_ssm_inputs(cfg, p, xz):
+    """xz: conv'd activation [B,S,di] -> (dt, Bmat, Cmat)."""
+    ds, dr = cfg.mamba_d_state, cfg.dt_rank
+    proj = xz @ p["w_x"]
+    dt, Bm, Cm = jnp.split(proj, [dr, dr + ds], axis=-1)
+    dt = jax.nn.softplus(dt @ p["w_dt"] + p["b_dt"])  # [B,S,di]
+    return dt, Bm, Cm
+
+
+def mamba_seq(cfg, p, x, *, positions=None, position_ids=None, causal=True,
+              cross_kv=None, cache_len=None, chunk=64, conv0=None, h0=None):
+    B, S, d = x.shape
+    di, ds, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    xz = x @ p["w_in"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = constrain(xin, "batch", None, "dinner")
+    # causal depthwise conv via shifts
+    prev = conv0 if conv0 is not None else jnp.zeros((B, dc - 1, di), x.dtype)
+    xp = jnp.concatenate([prev, xin], axis=1)
+    conv = sum(xp[:, i:i + S] * p["conv_w"][i] for i in range(dc)) + p["conv_b"]
+    conv_state = xp[:, S:S + dc - 1] if S >= dc - 1 else xp[:, -(dc - 1):]
+    xc = jax.nn.silu(conv)
+    dt, Bm, Cm = _mamba_ssm_inputs(cfg, p, xc)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # [di,ds]
+
+    nchunk = -(-S // chunk)
+    pad = nchunk * chunk - S
+    xc_orig = xc
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        xc = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+
+    def toc(t):
+        return t.reshape(B, nchunk, chunk, t.shape[-1]).transpose(1, 0, 2, 3).astype(jnp.float32)
+
+    dtc, Bmc, Cmc, xcc = map(toc, (dt, Bm, Cm, xc))
+
+    def chunk_body(h_in, xs):
+        dtb, Bb, Cb, xb = xs  # [B,c,*]
+        a = jnp.exp(dtb[..., None] * A)          # [B,c,di,ds]
+        b = (dtb * xb)[..., None] * Bb[:, :, None, :]  # [B,c,di,ds]
+
+        def comb(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        Ac, Bc_ = jax.lax.associative_scan(comb, (a, b), axis=1)
+        h = Ac * h_in[:, None] + Bc_             # inclusive states [B,c,di,ds]
+        y = jnp.einsum("bcds,bcs->bcd", h, Cb)
+        return h[:, -1], y
+
+    h_init = h0 if h0 is not None else jnp.zeros((B, di, ds), jnp.float32)
+    h_fin, y = jax.lax.scan(chunk_body, h_init, (dtc, Bmc, Cmc, xcc))
+    y = y.transpose(1, 0, 2, 3).reshape(B, nchunk * chunk, di)[:, :S]
+    y = y + xc_orig.astype(jnp.float32) * p["D_skip"].astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["w_out"]
+    return y, {"conv": conv_state, "h": h_fin}
+
+
+def mamba_init_cache(cfg, batch, cache_len, dtype):
+    di, ds, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    return {
+        "conv": jnp.zeros((batch, dc - 1, di), dtype),
+        "h": jnp.zeros((batch, di, ds), jnp.float32),
+    }
+
+
+def mamba_step(cfg, p, x, state, pos, *, position_ids=None, cross_kv=None,
+               long_ctx=False):
+    B = x.shape[0]
+    di, ds, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    xz = x @ p["w_in"]
+    xin, z = jnp.split(xz, 2, axis=-1)  # [B,1,di]
+    xp = jnp.concatenate([state["conv"], xin], axis=1)  # [B,dc,di]
+    conv = (xp * p["conv_w"]).sum(axis=1, keepdims=True) + p["conv_b"]
+    xc = jax.nn.silu(conv)
+    dt, Bm, Cm = _mamba_ssm_inputs(cfg, p, xc)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt[:, 0, :, None].astype(jnp.float32) * A)
+    b = (dt[:, 0] * xc[:, 0]).astype(jnp.float32)[..., None] * \
+        Bm[:, 0, None, :].astype(jnp.float32)
+    h = a * state["h"] + b
+    y = jnp.einsum("bds,bs->bd", h, Cm[:, 0].astype(jnp.float32))
+    y = y + xc[:, 0].astype(jnp.float32) * p["D_skip"].astype(jnp.float32)
+    y = (y[:, None].astype(x.dtype) * jax.nn.silu(z)) @ p["w_out"]
+    return y, {"conv": xp[:, 1:], "h": h}
+
+
+# -------------------------------------------------------------- MLPs -------
+def mlp_init(rng, cfg, kind):
+    d = cfg.d_model
+    ks = jax.random.split(rng, 4)
+    if kind == "swiglu":
+        return {
+            "w1": _dense_init(ks[0], (d, cfg.d_ff), cfg.jdtype),
+            "w3": _dense_init(ks[1], (d, cfg.d_ff), cfg.jdtype),
+            "w2": _dense_init(ks[2], (cfg.d_ff, d), cfg.jdtype),
+        }
+    if kind == "gelu":
+        p = {
+            "w_up": _dense_init(ks[0], (d, cfg.d_ff), cfg.jdtype),
+            "w_down": _dense_init(ks[1], (cfg.d_ff, d), cfg.jdtype),
+        }
+        if cfg.qkv_bias:
+            p["b_up"] = jnp.zeros((cfg.d_ff,), cfg.jdtype)
+            p["b_down"] = jnp.zeros((d,), cfg.jdtype)
+        return p
+    if kind == "rwkv_cm":
+        return {
+            "cm_mu_k": jnp.full((d,), 0.5, cfg.jdtype),
+            "cm_mu_r": jnp.full((d,), 0.5, cfg.jdtype),
+            "wk_cm": _dense_init(ks[0], (d, cfg.d_ff), cfg.jdtype),
+            "wv_cm": _dense_init(ks[1], (cfg.d_ff, d), cfg.jdtype),
+            "wr_cm": _dense_init(ks[2], (d, d), cfg.jdtype),
+        }
+    if kind == "moe":
+        e_ff = cfg.moe_d_ff or cfg.d_ff
+        E = cfg.n_experts
+        p = {
+            "w_router": _dense_init(ks[0], (d, E), jnp.float32),
+            "we1": _dense_init(ks[1], (E, d, e_ff), cfg.jdtype),
+            "we3": _dense_init(ks[2], (E, d, e_ff), cfg.jdtype),
+            "we2": _dense_init(ks[3], (E, e_ff, d), cfg.jdtype),
+        }
+        if cfg.n_shared_experts:
+            sf = e_ff * cfg.n_shared_experts
+            ks2 = jax.random.split(ks[3], 3)
+            p["ws1"] = _dense_init(ks2[0], (d, sf), cfg.jdtype)
+            p["ws3"] = _dense_init(ks2[1], (d, sf), cfg.jdtype)
+            p["ws2"] = _dense_init(ks2[2], (sf, d), cfg.jdtype)
+        return p
+    raise ValueError(kind)
+
+
+def mlp_apply(cfg, p, x, kind, cm_prev=None):
+    act = _act(cfg.act)
+    if kind == "swiglu":
+        h = act(x @ p["w1"]) * (x @ p["w3"])
+        h = constrain(h, "batch", "seq", "ffn")
+        return h @ p["w2"], None
+    if kind == "gelu":
+        h = x @ p["w_up"] + (p["b_up"] if "b_up" in p else 0)
+        h = constrain(jax.nn.gelu(h), "batch", "seq", "ffn")
+        return h @ p["w_down"] + (p["b_down"] if "b_down" in p else 0), None
+    if kind == "rwkv_cm":
+        B, S, d = x.shape
+        prev = cm_prev if cm_prev is not None else jnp.zeros((B, 1, d), x.dtype)
+        x_prev = jnp.concatenate([prev, x[:, :-1]], axis=1) if S > 1 else prev
+        xk = x + (x_prev - x) * p["cm_mu_k"]
+        xr = x + (x_prev - x) * p["cm_mu_r"]
+        h = jnp.square(jax.nn.relu(xk @ p["wk_cm"]))
+        h = constrain(h, "batch", "seq", "ffn")
+        return jax.nn.sigmoid(xr @ p["wr_cm"]) * (h @ p["wv_cm"]), x[:, -1:]
+    if kind == "moe":
+        return moe_apply(cfg, p, x)
+    raise ValueError(kind)
+
+
+def _raw_scatter(upd, e, p, E, C):
+    """upd [G,N,d] -> buf [G,E,C+1,d]; group-local batched scatter-add."""
+    G, N, d = upd.shape
+
+    def one(u_g, e_g, p_g):
+        return jnp.zeros((E, C + 1, d), u_g.dtype).at[e_g, p_g].add(u_g)
+
+    # experts -> model (EP) when divisible; otherwise the feature dim takes
+    # the model axis so expert-output reductions emit reduce-scatters
+    return constrain(jax.vmap(one)(upd, e, p), "data", "experts", None,
+                     "model")
+
+
+def _raw_gather(src, e, p):
+    """src [G,E,C+1,d] -> out [G,N,d]; group-local batched gather."""
+
+    def one(s_g, e_g, p_g):
+        return s_g[e_g, p_g]
+
+    return constrain(jax.vmap(one)(src, e, p), "data", None, "model")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _dispatch_scatter(upd, e, p, E, C):
+    return _raw_scatter(upd, e, p, E, C)
+
+
+def _dispatch_fwd(upd, e, p, E, C):
+    return _raw_scatter(upd, e, p, E, C), (e, p)
+
+
+def _dispatch_bwd(E, C, res, g):
+    e, p = res
+    # adjoint of scatter-add is gather: keeps cotangents group-sharded
+    return (_raw_gather(constrain(g, "data", "experts", None, "model"),
+                        e, p), None, None)
+
+
+_dispatch_scatter.defvjp(_dispatch_fwd, _dispatch_bwd)
+
+
+@jax.custom_vjp
+def _combine_gather(src, e, p):
+    return _raw_gather(src, e, p)
+
+
+def _combine_fwd(src, e, p):
+    return _raw_gather(src, e, p), (e, p, src.shape)
+
+
+def _combine_bwd(res, g):
+    e, p, shape = res
+    E, C1 = shape[1], shape[2]
+    d_src = _raw_scatter(constrain(g, "data", None, "model"), e, p, E,
+                         C1 - 1)
+    return d_src, None, None
+
+
+_combine_gather.defvjp(_combine_fwd, _combine_bwd)
+
+
+def _moe_groups(T: int) -> int:
+    """Routing groups, aligned to the data shards (GShard-style local
+    dispatch: tokens scatter only within their group, so the dispatch
+    scatter/gather stays shard-local and GSPMD never replicates the flat
+    token tensors)."""
+    from repro.dist.sharding import current_ctx
+    ctx = current_ctx()
+    g = ctx.axis_size("batch") if ctx is not None else 1
+    return g if g > 1 and T % g == 0 else 1
+
+
+def moe_apply(cfg, p, x):
+    """Capacity-based top-k routing, group-local dispatch (GShard-style)."""
+    B, S, d = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.top_k
+    G = _moe_groups(T)
+    Tg = T // G
+    xg = constrain(x.reshape(G, Tg, d), "data", None, None)
+    logits = xg.astype(jnp.float32) @ p["w_router"]  # [G,Tg,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # [G,Tg,k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    C = max(1, -(-int(cfg.capacity_factor * k * Tg) // E))
+    flat_e = constrain(gate_idx.reshape(G, Tg * k), "data", None)
+    oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # [G,Tg*k,E]
+    pos = jnp.cumsum(oh, axis=1) - 1
+    pos = jnp.take_along_axis(pos, flat_e[..., None], axis=2)[..., 0]
+    keep = pos < C
+    pos_c = constrain(jnp.where(keep, pos, C), "data", None)  # overflow row
+
+    xin_flat = jnp.repeat(xg, k, axis=1)  # [G,Tg*k,d]
+    upd = constrain(xin_flat * keep[..., None].astype(x.dtype),
+                    "data", None, None)
+    buf = _dispatch_scatter(upd, flat_e, pos_c, E, C)
+    xin = constrain(buf[:, :, :C], "data", "experts", None, None)  # [G,E,C,d]
+
+    act = _act(cfg.act)
+    h = act(jnp.einsum("gecd,edf->gecf", xin, p["we1"])) * \
+        jnp.einsum("gecd,edf->gecf", xin, p["we3"])
+    h = constrain(h, "data", "experts", None, "ffn")
+    out_e = jnp.einsum("gecf,efd->gecd", h, p["we2"])  # [G,E,C,d]
+    out_e = constrain(out_e, "data", "experts", None, "model")
+    out_e = jnp.concatenate(
+        [out_e, jnp.zeros((G, E, 1, d), out_e.dtype)], axis=2)
+
+    gathered = _combine_gather(out_e, flat_e, pos_c)  # [G,Tg*k,d]
+    w = (gate_vals.reshape(G, Tg * k) * keep.astype(jnp.float32)).astype(x.dtype)
+    y = (gathered * w[..., None]).reshape(G, Tg, k, d).sum(axis=2)
+    y = constrain(y, "data", None, "model")
+    if cfg.n_shared_experts:
+        hs = act(xg @ p["ws1"]) * (xg @ p["ws3"])
+        hs = constrain(hs, "data", None, "ffn")
+        y = y + hs @ p["ws2"]
+    return y.reshape(B, S, d), None
+
+
+MIXER_INIT = {"gqa": gqa_init, "mla": mla_init, "rwkv6": rwkv6_init,
+              "mamba": mamba_init}
+MIXER_SEQ = {"gqa": gqa_seq, "mla": mla_seq, "rwkv6": rwkv6_seq,
+             "mamba": mamba_seq}
+MIXER_STEP = {"gqa": gqa_step, "mla": mla_step, "rwkv6": rwkv6_step,
+              "mamba": mamba_step}
+MIXER_CACHE = {"gqa": gqa_init_cache, "mla": mla_init_cache,
+               "rwkv6": rwkv6_init_cache, "mamba": mamba_init_cache}

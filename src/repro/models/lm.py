@@ -1,0 +1,392 @@
+"""Unified LM: pattern-scanned decoder (+ optional encoder) over the blocks.
+
+Public surface:
+  init_params(rng, cfg)                  -> params pytree
+  forward(cfg, params, tokens, ...)      -> logits
+  train_loss(cfg, params, batch)         -> scalar loss
+  init_caches(cfg, batch, cache_len)     -> decode cache pytree
+  prefill(cfg, params, tokens, ...)      -> (logits_last, caches)
+  serve_step(cfg, params, caches, token, pos, ...) -> (logits, caches)
+"""
+from __future__ import annotations
+
+import functools
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain, current_ctx
+from repro.models import blocks, loss as loss_lib, rope as rope_lib
+from repro.models.blocks import (MIXER_CACHE, MIXER_INIT, MIXER_SEQ,
+                                 MIXER_STEP, apply_norm, mlp_apply, mlp_init,
+                                 norm_init)
+
+# ---------------------------------------------------------------- init -----
+
+
+def init_layer(rng, cfg, spec):
+    ks = jax.random.split(rng, 5)
+    p = {
+        "ln1": norm_init(cfg),
+        "mixer": MIXER_INIT[spec.mixer](ks[0], cfg),
+        "ln2": norm_init(cfg),
+        "mlp": mlp_init(ks[1], cfg, spec.mlp),
+    }
+    if spec.cross_attn:
+        p["ln_cross"] = norm_init(cfg)
+        p["cross"] = blocks.gqa_init(ks[2], cfg, cross=True)
+    if cfg.ffn_surrogate_dim:
+        d, sd = cfg.d_model, cfg.ffn_surrogate_dim
+        p["surr"] = {
+            "w1": blocks._dense_init(ks[3], (d, sd), cfg.jdtype),
+            "w2": blocks._dense_init(ks[4], (sd, d), cfg.jdtype),
+        }
+    return p
+
+
+def init_params(rng, cfg):
+    ks = jax.random.split(rng, 8)
+    Vp, D = cfg.padded_vocab, cfg.d_model
+    p = {"tok_embed": (jax.random.normal(ks[0], (Vp, D)) * 0.02).astype(cfg.jdtype)}
+    R = cfg.pattern_repeats
+    p["prefix"] = [init_layer(k, cfg, s)
+                   for k, s in zip(jax.random.split(ks[1], max(1, len(cfg.prefix))),
+                                   cfg.prefix)]
+    stack = []
+    for i, spec in enumerate(cfg.pattern):
+        keys = jax.random.split(jax.random.fold_in(ks[2], i), R)
+        stack.append(jax.vmap(lambda k: init_layer(k, cfg, spec))(keys))
+    p["stack"] = tuple(stack)
+    p["final_norm"] = norm_init(cfg)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (jax.random.normal(ks[3], (D, Vp)) * 0.02).astype(cfg.jdtype)
+    if cfg.rope == "none" and not _is_recurrent_only(cfg):
+        p["pos_embed"] = (jax.random.normal(ks[4], (cfg.max_pos, D)) * 0.01).astype(cfg.jdtype)
+    if cfg.enc_dec:
+        Re = cfg.enc_layers // len(cfg.enc_pattern)
+        enc_stack = []
+        for i, spec in enumerate(cfg.enc_pattern):
+            keys = jax.random.split(jax.random.fold_in(ks[5], i), Re)
+            enc_stack.append(jax.vmap(lambda k: init_layer(k, cfg, spec))(keys))
+        p["encoder"] = {"stack": tuple(enc_stack), "final_norm": norm_init(cfg)}
+    return p
+
+
+def _is_recurrent_only(cfg):
+    return all(s.mixer in ("rwkv6", "mamba") for s in
+               list(cfg.prefix) + list(cfg.pattern))
+
+
+# ------------------------------------------------------------- forward -----
+
+
+def _apply_layer_seq(cfg, p, spec, x, *, positions, position_ids, enc_out):
+    kw = dict(positions=positions, position_ids=position_ids)
+    h, mc = MIXER_SEQ[spec.mixer](cfg, p["mixer"], apply_norm(cfg, p["ln1"], x), **kw)
+    x = x + h
+    x = constrain(x, "batch", _seq_ax(cfg), None)
+    if spec.cross_attn and enc_out is not None:
+        ckv = _cross_kv(cfg, p["cross"], enc_out)
+        h, _ = blocks.gqa_seq(cfg, p["cross"], apply_norm(cfg, p["ln_cross"], x),
+                              positions=positions, cross_kv=ckv)
+        x = x + h
+    h, cm_new = mlp_apply(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x), spec.mlp)
+    x = x + h
+    x = constrain(x, "batch", _seq_ax(cfg), None)
+    cache = {"mixer": mc}
+    if spec.mlp == "rwkv_cm":
+        cache["cm_x_last"] = cm_new
+    return x, cache
+
+
+def _seq_ax(cfg):
+    # SSM/hybrid archs keep seq unsharded (sequential chunk scans); attention
+    # archs shard the residual stream's seq dim (Megatron-SP style).
+    return None if any(s.mixer in ("rwkv6", "mamba")
+                       for s in list(cfg.pattern) + list(cfg.prefix)) else "seq"
+
+
+def _cross_kv(cfg, pc, enc_out):
+    B, Se, _ = enc_out.shape
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    k = enc_out @ pc["wk"]
+    v = enc_out @ pc["wv"]
+    if cfg.qkv_bias:
+        k, v = k + pc["bk"], v + pc["bv"]
+    return k.reshape(B, Se, KV, hd), v.reshape(B, Se, KV, hd)
+
+
+def _embed(cfg, params, tokens, pos_offset=0):
+    x = loss_lib.embed_lookup(params["tok_embed"], tokens)
+    if "pos_embed" in params:
+        S = tokens.shape[1]
+        pe = jax.lax.dynamic_slice_in_dim(params["pos_embed"], pos_offset, S, 0)
+        x = x + pe[None]
+    return constrain(x, "batch", _seq_ax(cfg), None)
+
+
+def encode(cfg, params, enc_embeds):
+    """Whisper-style encoder over precomputed frame embeddings (stub frontend)."""
+    x = enc_embeds + rope_lib.sinusoidal(enc_embeds.shape[1], cfg.d_model
+                                         ).astype(enc_embeds.dtype)[None]
+    x = constrain(x, "batch", None, None)
+    positions = jnp.arange(x.shape[1])
+    for i, spec in enumerate(cfg.enc_pattern):
+        def body(h, lp, spec=spec):
+            h2, _ = _apply_layer_seq(cfg, lp, spec, h, positions=positions,
+                                     position_ids=None, enc_out=None)
+            return h2, None
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(body, x, params["encoder"]["stack"][i])
+        else:
+            Re = cfg.enc_layers // len(cfg.enc_pattern)
+            for r in range(Re):
+                lp = jax.tree.map(lambda t: t[r], params["encoder"]["stack"][i])
+                x, _ = body(x, lp)
+    return apply_norm(cfg, params["encoder"]["final_norm"], x)
+
+
+def hidden_states(cfg, params, tokens, *, position_ids=None, enc_embeds=None,
+                  collect_caches=False):
+    """tokens [B,S] -> (final-normed hidden [B,S,D], caches, enc_out)."""
+    B, S = tokens.shape
+    enc_out = encode(cfg, params, enc_embeds) if cfg.enc_dec else None
+    x = _embed(cfg, params, tokens)
+    positions = jnp.arange(S)
+    caches = {"prefix": [], "stack": []}
+    for p, spec in zip(params["prefix"], cfg.prefix):
+        x, c = _apply_layer_seq(cfg, p, spec, x, positions=positions,
+                                position_ids=position_ids, enc_out=enc_out)
+        caches["prefix"].append(c)
+
+    def body(h, lps):
+        new_c = []
+        for lp, spec in zip(lps, cfg.pattern):
+            h, c = _apply_layer_seq(cfg, lp, spec, h, positions=positions,
+                                    position_ids=position_ids, enc_out=enc_out)
+            new_c.append(c)
+        return h, tuple(new_c) if collect_caches else None
+
+    bodyf = jax.checkpoint(body) if cfg.remat else body
+    if cfg.scan_layers:
+        x, stack_caches = jax.lax.scan(bodyf, x, params["stack"])
+    else:  # unrolled: exact per-layer cost accounting for the dry-run
+        collected = []
+        for r in range(cfg.pattern_repeats):
+            lps = jax.tree.map(lambda t: t[r], params["stack"])
+            x, c = bodyf(x, lps)
+            collected.append(c)
+        stack_caches = (jax.tree.map(lambda *xs: jnp.stack(xs), *collected)
+                        if collect_caches else None)
+    caches["stack"] = stack_caches
+    x = apply_norm(cfg, params["final_norm"], x)
+    return x, caches, enc_out
+
+
+def _head_matrix(cfg, params, dtype):
+    head = params.get("lm_head")
+    return head if head is not None else params["tok_embed"].T.astype(dtype)
+
+
+def _logits_from_hidden(cfg, params, x):
+    logits = x @ _head_matrix(cfg, params, x.dtype)
+    logits = constrain(logits, "batch", None, "vocab")
+    if cfg.padded_vocab != cfg.vocab_size:
+        mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(mask, logits, -1e30)
+    return logits
+
+
+def forward(cfg, params, tokens, *, position_ids=None, enc_embeds=None,
+            collect_caches=False, last_only=False):
+    """tokens [B,S] -> logits [B,S,Vp] (or [B,1,Vp] with last_only)."""
+    x, caches, enc_out = hidden_states(cfg, params, tokens,
+                                       position_ids=position_ids,
+                                       enc_embeds=enc_embeds,
+                                       collect_caches=collect_caches)
+    if last_only:
+        x = x[:, -1:]
+    logits = _logits_from_hidden(cfg, params, x)
+    if collect_caches:
+        return logits, caches, enc_out
+    return logits
+
+
+def train_loss(cfg, params, batch, *, fused: bool = True):
+    x, _, _ = hidden_states(cfg, params, batch["tokens"],
+                            position_ids=batch.get("position_ids"),
+                            enc_embeds=batch.get("enc_embeds"))
+    W = _head_matrix(cfg, params, x.dtype)
+    if fused:
+        return loss_lib.fused_linear_xent(x, W, batch["targets"],
+                                          cfg.vocab_size,
+                                          unroll=cfg.unroll_inner)
+    return loss_lib.naive_xent(x, W, batch["targets"], cfg.vocab_size)
+
+
+# -------------------------------------------------------------- decode -----
+
+
+def _layer_cache(cfg, spec, batch, cache_len, dtype):
+    c = {"mixer": MIXER_CACHE[spec.mixer](cfg, batch, cache_len, dtype)}
+    if spec.mlp == "rwkv_cm":
+        c["cm_x_last"] = jnp.zeros((batch, 1, cfg.d_model), dtype)
+    return c
+
+
+def init_caches(cfg, batch, cache_len, dtype=None, enc_out=None, params=None):
+    """Decode caches: prefix list + per-slot stacked trees (+ cross-kv)."""
+    dtype = dtype or cfg.jdtype
+    R = cfg.pattern_repeats
+    caches = {
+        "prefix": [_layer_cache(cfg, s, batch, cache_len, dtype) for s in cfg.prefix],
+        "stack": tuple(
+            jax.tree.map(lambda x: jnp.broadcast_to(x, (R,) + x.shape),
+                         _layer_cache(cfg, s, batch, cache_len, dtype))
+            for s in cfg.pattern),
+    }
+    if cfg.enc_dec:
+        assert enc_out is not None and params is not None
+        for i in range(len(cfg.pattern)):
+            ck, cv = jax.vmap(lambda pc: _cross_kv(cfg, pc, enc_out))(
+                params["stack"][i]["cross"])
+            caches["stack"][i]["cross_k"] = ck
+            caches["stack"][i]["cross_v"] = cv
+    return caches
+
+
+def _apply_layer_step(cfg, p, spec, x, cache, pos, *, position_ids, long_ctx):
+    kw = dict(position_ids=position_ids, long_ctx=long_ctx)
+    cross_kv = None
+    if spec.cross_attn and "cross_k" in cache:
+        cross_kv = (cache["cross_k"], cache["cross_v"])
+    h, mc = MIXER_STEP[spec.mixer](cfg, p["mixer"], apply_norm(cfg, p["ln1"], x),
+                                   cache["mixer"], pos, **kw)
+    x = x + h
+    if spec.cross_attn and cross_kv is not None:
+        h, _ = blocks.gqa_step(cfg, p["cross"], apply_norm(cfg, p["ln_cross"], x),
+                               None, pos, cross_kv=cross_kv)
+        x = x + h
+    cm_prev = cache.get("cm_x_last")
+    cm_new = cm_prev
+    if cfg.ffn_surrogate_dim and "surr" in p:
+        # surrogate execution path (paper: the NN replaces the dominant
+        # kernel); the accurate path is taken on interleaved steps
+        xn = apply_norm(cfg, p["ln2"], x)
+        h = jax.nn.silu(xn @ p["surr"]["w1"]) @ p["surr"]["w2"]
+    else:
+        h, cm_new = mlp_apply(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x),
+                              spec.mlp, cm_prev=cm_prev)
+    x = x + h
+    new_cache = dict(cache)
+    new_cache["mixer"] = mc
+    if cm_prev is not None:
+        new_cache["cm_x_last"] = cm_new
+    return x, new_cache
+
+
+def serve_step(cfg, params, caches, tokens, pos, *, position_ids=None,
+               long_ctx=False):
+    """One decode step. tokens [B,1] -> (logits [B,Vp], new caches)."""
+    x = jnp.take(params["tok_embed"], tokens, axis=0)
+    if "pos_embed" in params:
+        pe = jax.lax.dynamic_slice_in_dim(params["pos_embed"], pos, 1, 0)
+        x = x + pe[None]
+    x = constrain(x, "batch", None, None)
+    new_prefix = []
+    for p, spec, c in zip(params["prefix"], cfg.prefix, caches["prefix"]):
+        x, c2 = _apply_layer_step(cfg, p, spec, x, c, pos,
+                                  position_ids=position_ids, long_ctx=long_ctx)
+        new_prefix.append(c2)
+
+    def body(h, xs):
+        lps, cs = xs
+        new_cs = []
+        for lp, spec, c in zip(lps, cfg.pattern, cs):
+            h, c2 = _apply_layer_step(cfg, lp, spec, h, c, pos,
+                                      position_ids=position_ids,
+                                      long_ctx=long_ctx)
+            new_cs.append(c2)
+        return h, tuple(new_cs)
+
+    if cfg.scan_layers:
+        x, new_stack = jax.lax.scan(body, x, (params["stack"], caches["stack"]))
+    else:
+        collected = []
+        for r in range(cfg.pattern_repeats):
+            lps = jax.tree.map(lambda t: t[r], params["stack"])
+            cs = jax.tree.map(lambda t: t[r], caches["stack"])
+            x, c = body(x, (lps, cs))
+            collected.append(c)
+        new_stack = jax.tree.map(lambda *xs: jnp.stack(xs), *collected)
+    x = apply_norm(cfg, params["final_norm"], x)
+    head = params.get("lm_head")
+    logits = x[:, 0] @ (head if head is not None
+                        else params["tok_embed"].T.astype(x.dtype))
+    if cfg.padded_vocab != cfg.vocab_size:
+        mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(mask, logits, -1e30)
+    return logits, {"prefix": new_prefix, "stack": new_stack}
+
+
+def prefill(cfg, params, tokens, *, position_ids=None, enc_embeds=None,
+            cache_len=None):
+    """Forward over the prompt; returns (last-token logits, decode caches)."""
+    logits, caches, enc_out = forward(cfg, params, tokens,
+                                      position_ids=position_ids,
+                                      enc_embeds=enc_embeds,
+                                      collect_caches=True, last_only=True)
+    B, S = tokens.shape
+    cache_len = cache_len or S
+    out = init_caches(cfg, B, cache_len, cfg.jdtype, enc_out=enc_out,
+                      params=params)
+    for i, (spec, src) in enumerate(zip(cfg.prefix, caches["prefix"])):
+        out["prefix"][i]["mixer"] = _fill_mixer(
+            cfg, spec, out["prefix"][i]["mixer"], src["mixer"])
+        if "cm_x_last" in src:
+            out["prefix"][i]["cm_x_last"] = src["cm_x_last"]
+    for i, spec in enumerate(cfg.pattern):
+        src = caches["stack"][i]
+        out["stack"][i]["mixer"] = _fill_mixer(
+            cfg, spec, out["stack"][i]["mixer"], src["mixer"])
+        if "cm_x_last" in src:
+            out["stack"][i]["cm_x_last"] = src["cm_x_last"]
+    return logits[:, -1], out
+
+
+def _fill_mixer(cfg, spec, dst, src):
+    """Write prefill-produced kv/states into preallocated cache buffers."""
+    if src is None:
+        return dst
+    if spec.mixer == "gqa":
+        k, v = src
+        dst = dict(dst)
+        if "k_scale" in dst:  # int8 cache: quantize prefill kv
+            kq, ks = blocks._quantize_kv(k)
+            vq, vs = blocks._quantize_kv(v)
+            for key, val in (("k", kq), ("v", vq), ("k_scale", ks),
+                             ("v_scale", vs)):
+                dst[key] = jax.lax.dynamic_update_slice(
+                    dst[key], val.astype(dst[key].dtype),
+                    (0,) * dst[key].ndim)
+            return dst
+        dst["k"] = jax.lax.dynamic_update_slice(
+            dst["k"], k.astype(dst["k"].dtype), (0,) * dst["k"].ndim)
+        dst["v"] = jax.lax.dynamic_update_slice(
+            dst["v"], v.astype(dst["v"].dtype), (0,) * dst["v"].ndim)
+        return dst
+    if spec.mixer == "mla":
+        ckv, kr = src
+        dst = dict(dst)
+        dst["ckv"] = jax.lax.dynamic_update_slice(
+            dst["ckv"], ckv.astype(dst["ckv"].dtype), (0,) * dst["ckv"].ndim)
+        dst["kr"] = jax.lax.dynamic_update_slice(
+            dst["kr"], kr.astype(dst["kr"].dtype), (0,) * dst["kr"].ndim)
+        return dst
+    if spec.mixer in ("rwkv6", "mamba"):
+        return jax.tree.map(lambda d, s: s.astype(d.dtype), dst, src)
+    return dst

@@ -1,0 +1,56 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: [..., S] int32 (broadcastable)."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)  # [half]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]  # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, position_ids, theta: float, sections):
+    """Qwen2-VL multimodal RoPE.
+
+    x: [B, S, H, hd]; position_ids: [3, B, S] (temporal, height, width).
+    ``sections`` give the per-component split of the hd/2 frequencies.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)  # [half]
+    # per-frequency positions, section c uses position component c
+    ang_parts = []
+    start = 0
+    for c, sec in enumerate(sections):
+        f = freqs[start:start + sec]
+        p = position_ids[c].astype(jnp.float32)  # [B, S]
+        ang_parts.append(p[..., None] * f)  # [B, S, sec]
+        start += sec
+    ang = jnp.concatenate(ang_parts, axis=-1)  # [B, S, half]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal(length: int, dim: int):
+    """Whisper-style sinusoidal table [length, dim]."""
+    half = dim // 2
+    scale = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / (half - 1))
+    pos = jnp.arange(length)[:, None] * scale[None, :]
+    return jnp.concatenate([jnp.sin(pos), jnp.cos(pos)], axis=1)

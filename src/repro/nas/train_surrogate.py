@@ -1,0 +1,94 @@
+"""Surrogate training on SurrogateDB data: Adam + early stopping.
+
+Normalization stats ride along in the model bundle's ``extra`` field so
+the inference engine reproduces them at deployment (the paper stores the
+equivalent inside the TorchScript module).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _adam(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.0):
+    m, v, t = state
+    t = t + 1
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    c1, c2 = 1 - b1 ** t, 1 - b2 ** t
+
+    def upd(p, mm, vv):
+        return p - lr * ((mm / c1) / (jnp.sqrt(vv / c2) + eps) + wd * p)
+
+    return jax.tree.map(upd, params, m, v), (m, v, t)
+
+
+def fit(net, X, Y, *, lr=1e-3, weight_decay=0.0, dropout=0.0, batch_size=128,
+        epochs=60, val_frac=0.2, seed=0, patience=8, x_reshape=None):
+    """Train `net` on numpy (X, Y). Returns (params, val_rmse, norm_stats)."""
+    rng = np.random.default_rng(seed)
+    n = X.shape[0]
+    perm = rng.permutation(n)
+    cut = max(1, int(n * (1 - val_frac)))
+    tr, va = perm[:cut], perm[cut:]
+    x_mu, x_sd = X[tr].mean(0), X[tr].std(0) + 1e-6
+    y_mu, y_sd = Y[tr].mean(0), Y[tr].std(0) + 1e-6
+    Xn = (X - x_mu) / x_sd
+    Yn = (Y - y_mu) / y_sd
+    if x_reshape is not None:
+        Xn = Xn.reshape((-1,) + tuple(x_reshape))
+    Xtr, Ytr = jnp.asarray(Xn[tr]), jnp.asarray(Yn[tr])
+    Xva, Yva = jnp.asarray(Xn[va]), jnp.asarray(Yn[va])
+
+    params = net.init(jax.random.PRNGKey(seed))
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    opt = (m, v, 0)
+
+    def loss_fn(p, xb, yb, key):
+        pred = net.apply(p, xb, train=True, rng=key)
+        return ((pred - yb.reshape(pred.shape)) ** 2).mean()
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    val_fn = jax.jit(lambda p: ((net.apply(p, Xva)
+                                 - Yva.reshape(-1, *net.out_shape()[1:]))
+                                ** 2).mean())
+
+    best, best_params, bad = np.inf, params, 0
+    key = jax.random.PRNGKey(seed + 1)
+    bs = min(batch_size, len(tr))
+    for ep in range(epochs):
+        order = rng.permutation(len(tr))
+        for i in range(0, len(order) - bs + 1, bs):
+            idx = order[i:i + bs]
+            key, k = jax.random.split(key)
+            _, g = grad_fn(params, Xtr[idx], Ytr[idx], k)
+            params, opt = _adam(params, g, opt, lr, wd=weight_decay)
+        vl = float(val_fn(params))
+        if vl < best - 1e-6:
+            best, best_params, bad = vl, params, 0
+        else:
+            bad += 1
+            if bad >= patience:
+                break
+    # de-normalized validation RMSE
+    val_rmse = float(np.sqrt(best) * np.mean(y_sd))
+    stats = {"x_mu": x_mu.tolist(), "x_sd": x_sd.tolist(),
+             "y_mu": y_mu.tolist(), "y_sd": y_sd.tolist()}
+    return best_params, val_rmse, stats
+
+
+def latency(net, params, in_shape, reps=10):
+    """Median jit'd inference wall time (the paper's latency objective)."""
+    x = jnp.zeros(in_shape, jnp.float32)
+    f = jax.jit(lambda p, x: net.apply(p, x))
+    f(params, x).block_until_ready()
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        f(params, x).block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))

@@ -1,0 +1,3 @@
+from repro.nn.layers import (CNN, MLP, Activation, Conv2D, Dense, Flatten,
+                             LayerNorm, MaxPool2D, Sequential, from_spec)
+from repro.nn.serialize import load_model, save_model

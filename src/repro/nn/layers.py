@@ -1,0 +1,284 @@
+"""Minimal NN module system for surrogate models (flax is not available
+offline).  Every layer is a (init, apply, spec) triple; ``Sequential``
+composes them; ``from_spec`` rebuilds a network from its JSON spec — the
+analogue of loading a TorchScript module in the paper's runtime.
+
+The NAS search space of the paper (Table IV) is expressible with exactly
+these layers: Dense stacks with feature multipliers (MiniBUDE, Binomial
+Options, Bonds) and small CNNs (MiniWeather, ParticleFilter).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+_ACTS = {
+    "relu": jax.nn.relu, "gelu": jax.nn.gelu, "tanh": jnp.tanh,
+    "silu": jax.nn.silu, "sigmoid": jax.nn.sigmoid, "identity": lambda x: x,
+}
+
+
+class Layer:
+    def init(self, rng, in_shape):
+        raise NotImplementedError
+
+    def apply(self, params, x, train=False):
+        raise NotImplementedError
+
+    def out_shape(self, in_shape):
+        raise NotImplementedError
+
+    def spec(self):
+        raise NotImplementedError
+
+
+class Dense(Layer):
+    def __init__(self, features: int, use_bias: bool = True):
+        self.features = features
+        self.use_bias = use_bias
+
+    def init(self, rng, in_shape):
+        fan_in = in_shape[-1]
+        w = jax.random.normal(rng, (fan_in, self.features)) * math.sqrt(2.0 / fan_in)
+        p = {"w": w.astype(jnp.float32)}
+        if self.use_bias:
+            p["b"] = jnp.zeros((self.features,), jnp.float32)
+        return p
+
+    def apply(self, params, x, train=False):
+        y = x @ params["w"]
+        return y + params["b"] if self.use_bias else y
+
+    def out_shape(self, in_shape):
+        return in_shape[:-1] + (self.features,)
+
+    def spec(self):
+        return {"kind": "dense", "features": self.features,
+                "use_bias": self.use_bias}
+
+
+class Conv2D(Layer):
+    """NHWC conv; SAME or VALID padding, optional stride."""
+
+    def __init__(self, features, kernel, stride=1, padding="SAME",
+                 use_bias=True):
+        self.features, self.kernel = features, kernel
+        self.stride, self.padding, self.use_bias = stride, padding, use_bias
+
+    def init(self, rng, in_shape):
+        cin = in_shape[-1]
+        k = self.kernel
+        fan_in = cin * k * k
+        w = jax.random.normal(rng, (k, k, cin, self.features)) * math.sqrt(2.0 / fan_in)
+        p = {"w": w.astype(jnp.float32)}
+        if self.use_bias:
+            p["b"] = jnp.zeros((self.features,), jnp.float32)
+        return p
+
+    def apply(self, params, x, train=False):
+        y = jax.lax.conv_general_dilated(
+            x, params["w"], (self.stride, self.stride), self.padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return y + params["b"] if self.use_bias else y
+
+    def out_shape(self, in_shape):
+        n, h, w, _ = in_shape
+        if self.padding == "SAME":
+            oh, ow = -(-h // self.stride), -(-w // self.stride)
+        else:
+            oh = (h - self.kernel) // self.stride + 1
+            ow = (w - self.kernel) // self.stride + 1
+        return (n, oh, ow, self.features)
+
+    def spec(self):
+        return {"kind": "conv2d", "features": self.features,
+                "kernel": self.kernel, "stride": self.stride,
+                "padding": self.padding, "use_bias": self.use_bias}
+
+
+class MaxPool2D(Layer):
+    def __init__(self, window, stride=None):
+        self.window = window
+        self.stride = stride or window
+
+    def init(self, rng, in_shape):
+        return {}
+
+    def apply(self, params, x, train=False):
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max,
+            (1, self.window, self.window, 1),
+            (1, self.stride, self.stride, 1), "VALID")
+
+    def out_shape(self, in_shape):
+        n, h, w, c = in_shape
+        oh = (h - self.window) // self.stride + 1
+        ow = (w - self.window) // self.stride + 1
+        return (n, oh, ow, c)
+
+    def spec(self):
+        return {"kind": "maxpool2d", "window": self.window,
+                "stride": self.stride}
+
+
+class Activation(Layer):
+    def __init__(self, name: str):
+        assert name in _ACTS, name
+        self.name = name
+
+    def init(self, rng, in_shape):
+        return {}
+
+    def apply(self, params, x, train=False):
+        return _ACTS[self.name](x)
+
+    def out_shape(self, in_shape):
+        return in_shape
+
+    def spec(self):
+        return {"kind": "act", "name": self.name}
+
+
+class Dropout(Layer):
+    """Train-time dropout (inference is identity; rng via params['rng'])."""
+
+    def __init__(self, rate: float):
+        self.rate = rate
+
+    def init(self, rng, in_shape):
+        return {}
+
+    def apply(self, params, x, train=False, rng=None):
+        if not train or self.rate <= 0 or rng is None:
+            return x
+        keep = jax.random.bernoulli(rng, 1 - self.rate, x.shape)
+        return jnp.where(keep, x / (1 - self.rate), 0)
+
+    def out_shape(self, in_shape):
+        return in_shape
+
+    def spec(self):
+        return {"kind": "dropout", "rate": self.rate}
+
+
+class Flatten(Layer):
+    def init(self, rng, in_shape):
+        return {}
+
+    def apply(self, params, x, train=False):
+        return x.reshape(x.shape[0], -1)
+
+    def out_shape(self, in_shape):
+        n = 1
+        for s in in_shape[1:]:
+            n *= s
+        return (in_shape[0], n)
+
+    def spec(self):
+        return {"kind": "flatten"}
+
+
+class LayerNorm(Layer):
+    def init(self, rng, in_shape):
+        return {"scale": jnp.ones((in_shape[-1],), jnp.float32),
+                "bias": jnp.zeros((in_shape[-1],), jnp.float32)}
+
+    def apply(self, params, x, train=False):
+        mu = x.mean(-1, keepdims=True)
+        var = ((x - mu) ** 2).mean(-1, keepdims=True)
+        return (x - mu) * jax.lax.rsqrt(var + 1e-6) * params["scale"] + params["bias"]
+
+    def out_shape(self, in_shape):
+        return in_shape
+
+    def spec(self):
+        return {"kind": "layernorm"}
+
+
+class Sequential:
+    def __init__(self, layers: Sequence[Layer], in_shape: Sequence[int]):
+        self.layers = list(layers)
+        self.in_shape = tuple(in_shape)
+
+    def init(self, rng):
+        params, shape = [], self.in_shape
+        for i, l in enumerate(self.layers):
+            params.append(l.init(jax.random.fold_in(rng, i), shape))
+            shape = l.out_shape(shape)
+        return params
+
+    def apply(self, params, x, train=False, rng=None):
+        for i, (l, p) in enumerate(zip(self.layers, params)):
+            if isinstance(l, Dropout):
+                r = jax.random.fold_in(rng, i) if rng is not None else None
+                x = l.apply(p, x, train=train, rng=r)
+            else:
+                x = l.apply(p, x, train=train)
+        return x
+
+    def out_shape(self):
+        shape = self.in_shape
+        for l in self.layers:
+            shape = l.out_shape(shape)
+        return shape
+
+    def spec(self):
+        return {"in_shape": list(self.in_shape),
+                "layers": [l.spec() for l in self.layers]}
+
+    def n_params(self, params):
+        return sum(x.size for x in jax.tree.leaves(params))
+
+
+_KINDS = {}
+
+
+def _register(kind):
+    def deco(fn):
+        _KINDS[kind] = fn
+        return fn
+    return deco
+
+
+_register("dense")(lambda s: Dense(s["features"], s.get("use_bias", True)))
+_register("conv2d")(lambda s: Conv2D(s["features"], s["kernel"], s["stride"],
+                                     s["padding"], s.get("use_bias", True)))
+_register("maxpool2d")(lambda s: MaxPool2D(s["window"], s["stride"]))
+_register("act")(lambda s: Activation(s["name"]))
+_register("dropout")(lambda s: Dropout(s["rate"]))
+_register("flatten")(lambda s: Flatten())
+_register("layernorm")(lambda s: LayerNorm())
+
+
+def from_spec(spec: dict) -> Sequential:
+    layers = [_KINDS[l["kind"]](l) for l in spec["layers"]]
+    return Sequential(layers, tuple(spec["in_shape"]))
+
+
+def MLP(in_shape, hidden: Sequence[int], out_features: int, act="relu",
+        dropout: float = 0.0) -> Sequential:
+    layers = []
+    for h in hidden:
+        layers += [Dense(h), Activation(act)]
+        if dropout:
+            layers.append(Dropout(dropout))
+    layers.append(Dense(out_features))
+    return Sequential(layers, in_shape)
+
+
+def CNN(in_shape, convs, dense: Sequence[int], out_features: int,
+        act="relu", pool: Optional[int] = None) -> Sequential:
+    """convs: list of (features, kernel, stride)."""
+    layers = []
+    for f, k, s in convs:
+        layers += [Conv2D(f, k, s), Activation(act)]
+    if pool:
+        layers.append(MaxPool2D(pool))
+    layers.append(Flatten())
+    for h in dense:
+        layers += [Dense(h), Activation(act)]
+    layers.append(Dense(out_features))
+    return Sequential(layers, in_shape)

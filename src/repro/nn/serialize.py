@@ -1,0 +1,45 @@
+"""Model bundles: spec.json + params.npz — the TorchScript-file analogue.
+
+The HPAC-ML runtime loads a bundle by path (the paper's ``model("...")``
+clause); ``save_model``/``load_model`` round-trip exactly.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import numpy as np
+
+
+def _flatten(params):
+    flat, treedef = jax.tree.flatten(params)
+    return flat, treedef
+
+
+def save_model(path, net, params, extra: dict | None = None):
+    """net: Sequential; params: its param pytree."""
+    path = pathlib.Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    spec = net.spec()
+    if extra:
+        spec["extra"] = extra
+    (path / "spec.json").write_text(json.dumps(spec, indent=1))
+    flat, _ = _flatten(params)
+    np.savez(path / "params.npz",
+             **{f"p{i}": np.asarray(x) for i, x in enumerate(flat)})
+    return str(path)
+
+
+def load_model(path):
+    """Returns (net, params, spec)."""
+    from repro.nn.layers import from_spec
+    path = pathlib.Path(path)
+    spec = json.loads((path / "spec.json").read_text())
+    net = from_spec(spec)
+    z = np.load(path / "params.npz")
+    flat = [jax.numpy.asarray(z[f"p{i}"]) for i in range(len(z.files))]
+    ref = net.init(jax.random.PRNGKey(0))
+    _, treedef = jax.tree.flatten(ref)
+    params = jax.tree.unflatten(treedef, flat)
+    return net, params, spec

@@ -1,0 +1,90 @@
+"""AdamW with mixed-precision state policies.
+
+``policy="full"``: fp32 master copy + fp32 (m, v) — 12 bytes/param of state.
+``policy="lean"``: no master, bf16 (m, v) — 4 bytes/param; the update is
+computed in fp32 and applied to the bf16 params directly (v5e practice for
+models whose full-policy state would blow the 16 GB/chip HBM budget;
+grok-1-314b uses this).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_opt_state(params, policy: str = "full"):
+    if policy == "full":
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+        }
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params),
+    }
+
+
+def adamw_update(params, grads, state, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1, policy: str = "full"):
+    step = state["step"] + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, master=None):
+        gf = g.astype(jnp.float32)
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        m_new = b1 * m32 + (1 - b1) * gf
+        v_new = b2 * v32 + (1 - b2) * gf * gf
+        mh = m_new / c1
+        vh = v_new / c2
+        base = master if master is not None else p.astype(jnp.float32)
+        new = base - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * base)
+        return new, m_new, v_new
+
+    p_leaves, treedef = jax.tree.flatten(params)
+    g_leaves = treedef.flatten_up_to(grads)
+    m_leaves = treedef.flatten_up_to(state["m"])
+    v_leaves = treedef.flatten_up_to(state["v"])
+    if policy == "full":
+        master_leaves = treedef.flatten_up_to(state["master"])
+        outs = [upd(p, g, m, v, w) for p, g, m, v, w in
+                zip(p_leaves, g_leaves, m_leaves, v_leaves, master_leaves)]
+        new_params = treedef.unflatten(
+            [o[0].astype(p.dtype) for o, p in zip(outs, p_leaves)])
+        return new_params, {
+            "step": step,
+            "m": treedef.unflatten([o[1] for o in outs]),
+            "v": treedef.unflatten([o[2] for o in outs]),
+            "master": treedef.unflatten([o[0] for o in outs]),
+        }
+    outs = [upd(p, g, m, v) for p, g, m, v in
+            zip(p_leaves, g_leaves, m_leaves, v_leaves)]
+    new_params = treedef.unflatten(
+        [o[0].astype(p.dtype) for o, p in zip(outs, p_leaves)])
+    return new_params, {
+        "step": step,
+        "m": treedef.unflatten([o[1].astype(jnp.bfloat16) for o in outs]),
+        "v": treedef.unflatten([o[2].astype(jnp.bfloat16) for o in outs]),
+    }
+
+
+def clip_by_global_norm(grads, max_norm: float = 1.0):
+    sq = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), grads),
+        0.0)
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def warmup_cosine(step, *, peak_lr=3e-4, warmup=100, total=10000, floor=0.1):
+    stepf = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = peak_lr * stepf / max(1, warmup)
+    frac = jnp.clip((stepf - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(stepf < warmup, warm, cos)

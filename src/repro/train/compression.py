@@ -1,0 +1,45 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+At multi-pod scale the cross-pod gradient reduction rides the slowest
+links; quantizing the reduced tensor to int8 (per-leaf scale) cuts those
+wire bytes 2x vs bf16 / 4x vs f32.  The quantization error is carried in
+an error-feedback residual (SGD-with-EF converges at the full-precision
+rate for smooth objectives), tested in tests/test_compression.py.
+
+Inside one pjit program the cross-pod reduction is XLA-generated, so the
+compressor exposes two forms:
+  * ``ef_compress(grads, residual)`` — drop-in grad transform (quantize ->
+    dequantize + residual update), modelling end-to-end numerics;
+  * ``wire_bytes(grads)`` — the analytic wire saving recorded in §Perf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _q_leaf(g, r):
+    gf = g.astype(jnp.float32) + r
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq.astype(g.dtype), gf - deq
+
+
+def init_residual(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def ef_compress(grads, residual):
+    """Returns (dequantized grads, new residual)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    outs = [_q_leaf(g, r) for g, r in zip(flat_g, flat_r)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))
+
+
+def wire_bytes(grads, dtype_bytes=4):
+    """(uncompressed, int8) wire bytes for one cross-pod all-reduce."""
+    n = sum(x.size for x in jax.tree.leaves(grads))
+    return n * dtype_bytes, n * 1 + 4 * len(jax.tree.leaves(grads))

@@ -1,0 +1,63 @@
+"""Production train step: fwd + bwd + clip + AdamW (+ optional microbatch
+grad accumulation and int8 gradient compression across the pod axis)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.optim.adamw import (adamw_update, clip_by_global_norm,
+                               init_opt_state, warmup_cosine)
+
+
+def make_train_state(rng, cfg):
+    params = lm.init_params(rng, cfg)
+    opt = init_opt_state(params, cfg.opt_policy)
+    return {"params": params, "opt": opt}
+
+
+def compute_grads(cfg, params, batch, *, microbatches: int = 1):
+    """Loss + grads, optionally accumulated over microbatches."""
+    if microbatches <= 1:
+        return jax.value_and_grad(lambda p: lm.train_loss(cfg, p, batch))(params)
+
+    B = batch["tokens"].shape[0]
+    assert B % microbatches == 0
+    mb = B // microbatches
+
+    def slice_mb(i):
+        return jax.tree.map(
+            lambda x: jax.lax.dynamic_slice_in_dim(x, i * mb, mb,
+                                                   axis=1 if x.ndim == 3 and x.shape[0] == 3 else 0),
+            batch)
+
+    def body(carry, i):
+        loss_acc, g_acc = carry
+        loss, g = jax.value_and_grad(
+            lambda p: lm.train_loss(cfg, p, slice_mb(i)))(params)
+        g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
+        return (loss_acc + loss, g_acc), None
+
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss, grads), _ = jax.lax.scan(body, (0.0, g0), jnp.arange(microbatches))
+    grads = jax.tree.map(lambda g: (g / microbatches), grads)
+    return loss / microbatches, grads
+
+
+def train_step(cfg, state, batch, *, step=None, microbatches: int = 1,
+               peak_lr=3e-4, total_steps=10000, grad_compress=None):
+    """One full optimizer step. Returns (new_state, metrics)."""
+    params, opt = state["params"], state["opt"]
+    loss, grads = compute_grads(cfg, params, batch, microbatches=microbatches)
+    if grad_compress is not None:
+        grads = grad_compress(grads)
+    grads, gnorm = clip_by_global_norm(grads, 1.0)
+    lr = warmup_cosine(opt["step"] if step is None else step,
+                       peak_lr=peak_lr, total=total_steps)
+    new_params, new_opt = adamw_update(params, grads, opt, lr,
+                                       policy=cfg.opt_policy)
+    return ({"params": new_params, "opt": new_opt},
+            {"loss": loss, "grad_norm": gnorm, "lr": lr})

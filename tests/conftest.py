@@ -1,0 +1,12 @@
+import os
+import sys
+import pathlib
+
+# tests run on the single real CPU device (the 512-device forcing is
+# exclusively dryrun.py's); keep XLA quiet and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+SRC = str(ROOT / "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)

@@ -1,0 +1,102 @@
+"""Tensor functor DSL + memory concretization: unit + property tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import TensorMap, sym, tensor_functor
+from repro.core.functor import SSlice, SymExpr
+
+
+def test_parse_paper_example():
+    f = tensor_functor("ifnctr: [i, j, 0:5] = ([i-1,j],[i+1,j],[i,j-1:j+2])")
+    assert f.name == "ifnctr"
+    assert f.sweep_symbols == ("i", "j")
+    assert f.n_features == 5
+
+
+def test_symexpr_arithmetic():
+    i = sym("i")
+    e = 2 * i + 3 - i
+    assert e.evaluate({"i": 10}) == 13
+    assert (i - 1).evaluate({"i": 5}) == 4
+
+
+def test_slice_extent_must_be_constant():
+    i, j = sym("i"), sym("j")
+    s = SSlice(i, i + 4)
+    assert s.n_elements() == 4
+    with pytest.raises(ValueError):
+        SSlice(i, j).n_elements()
+
+
+def test_paper_stencil_gather_matches_numpy():
+    f = tensor_functor("s: [i, j, 0:5] = ([i-1,j],[i+1,j],[i,j-1:j+2])")
+    N, M = 7, 9
+    t = np.arange(N * M, dtype=np.float32).reshape(N, M)
+    X = np.asarray(TensorMap(f, jnp.asarray(t),
+                             {"i": (1, N - 1), "j": (1, M - 1)}).to_tensor())
+    for i in range(1, N - 1):
+        for j in range(1, M - 1):
+            exp = [t[i - 1, j], t[i + 1, j], t[i, j - 1], t[i, j], t[i, j + 1]]
+            np.testing.assert_allclose(X[i - 1, j - 1], exp)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    dy=st.integers(-2, 2), dx=st.integers(-2, 2),
+    w=st.integers(1, 3),
+    n=st.integers(8, 14), m=st.integers(8, 14),
+)
+def test_functor_gather_property(dy, dx, w, n, m):
+    """Random offset + window functor == naive numpy gather."""
+    i, j = sym("i"), sym("j")
+    f = tensor_functor(name="g", lhs=[i, j, slice(0, w + 1)],
+                       rhs=[[i + dy, j + dx], [i, SSlice(j, j + w)]])
+    t = np.random.default_rng(0).normal(size=(n, m)).astype(np.float32)
+    lo_i, hi_i = 2, n - 3
+    lo_j, hi_j = 2, m - 4
+    X = np.asarray(TensorMap(f, jnp.asarray(t),
+                             {"i": (lo_i, hi_i), "j": (lo_j, hi_j)}).to_tensor())
+    assert X.shape == (hi_i - lo_i, hi_j - lo_j, w + 1)
+    for ii in range(hi_i - lo_i):
+        for jj in range(hi_j - lo_j):
+            ai, aj = lo_i + ii, lo_j + jj
+            exp = [t[ai + dy, aj + dx]] + [t[ai, aj + e] for e in range(w)]
+            np.testing.assert_allclose(X[ii, jj], exp)
+
+
+def test_from_tensor_roundtrip():
+    f = tensor_functor("p: [i, j] = ([i,j])")
+    N = 8
+    t = jnp.zeros((N, N))
+    tm = TensorMap(f, t, {"i": (1, N - 1), "j": (1, N - 1)}, "from")
+    y = jnp.arange(36.0).reshape(6, 6)
+    t2 = tm.from_tensor(y)
+    np.testing.assert_allclose(np.asarray(t2[1:-1, 1:-1]), np.asarray(y))
+    assert float(t2[0].sum()) == 0.0
+
+
+def test_gather_scatter_inverse():
+    """to_tensor then from_tensor restores the covered region."""
+    f = tensor_functor("p: [i, j] = ([i,j])")
+    N = 10
+    t = jnp.asarray(np.random.default_rng(1).normal(size=(N, N)).astype(np.float32))
+    rngs = {"i": (2, N - 2), "j": (3, N - 1)}
+    X = TensorMap(f, t, rngs).to_tensor()
+    t2 = TensorMap(f, jnp.zeros_like(t), rngs, "from").from_tensor(X)
+    np.testing.assert_allclose(np.asarray(t2[2:N-2, 3:N-1]),
+                               np.asarray(t[2:N-2, 3:N-1]))
+
+
+def test_strided_range():
+    f = tensor_functor("s: [i] = ([2*i])")
+    t = jnp.arange(20.0)
+    X = TensorMap(f, t, {"i": (0, 8)}).to_tensor()
+    np.testing.assert_allclose(np.asarray(X), np.arange(0, 16, 2))
+
+
+def test_min_array_shape():
+    f = tensor_functor("s: [i, j, 0:5] = ([i-1,j],[i+1,j],[i,j-1:j+2])")
+    tm = TensorMap(f, None, {"i": (1, 5), "j": (1, 6)}, "from")
+    assert tm.min_array_shape() == (6, 7)

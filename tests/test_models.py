@@ -1,0 +1,99 @@
+"""Per-arch smoke tests (reduced configs): forward/train-step shapes + no
+NaNs, and prefill+decode consistency against the full forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.archs import ARCH_NAMES, reduced
+from repro.configs.base import SHAPES, cell_supported, get_config
+from repro.models import lm
+from repro.train import trainer
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=16):
+    toks = jax.random.randint(RNG, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "targets": toks}
+    if cfg.needs_position_ids:
+        batch["position_ids"] = jnp.broadcast_to(
+            jnp.arange(S), (3, B, S)).astype(jnp.int32)
+    if cfg.enc_dec:
+        batch["enc_embeds"] = jax.random.normal(
+            RNG, (B, cfg.enc_ctx, cfg.d_model), cfg.jdtype)
+    return batch
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_arch_smoke_forward_and_trainstep(name):
+    cfg = reduced(get_config(name))
+    params = lm.init_params(RNG, cfg)
+    batch = _batch(cfg)
+    logits = lm.forward(cfg, params, batch["tokens"],
+                        position_ids=batch.get("position_ids"),
+                        enc_embeds=batch.get("enc_embeds"))
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    state = trainer.make_train_state(RNG, cfg)
+    # step=500 -> post-warmup lr; warmup lr (3e-6) is below bf16 resolution
+    state2, metrics = trainer.train_step(cfg, state, batch,
+                                         step=jnp.asarray(500),
+                                         peak_lr=3e-2)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert float(metrics["loss"]) < 2 * np.log(cfg.vocab_size)
+    # params actually changed
+    delta = jax.tree.map(lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                                    - b.astype(jnp.float32)).max()),
+                         state["params"], state2["params"])
+    assert max(jax.tree.leaves(delta)) > 0
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_arch_decode_matches_forward_fp32(name):
+    cfg = reduced(get_config(name)).replace(dtype="float32")
+    params = lm.init_params(RNG, cfg)
+    S = 12
+    batch = _batch(cfg, S=S)
+    toks = batch["tokens"]
+    kw = {k: batch[k] for k in ("position_ids", "enc_embeds") if k in batch}
+    full = lm.forward(cfg, params, toks, **kw)
+    half = S // 2
+    kw_pre = dict(kw)
+    if "position_ids" in kw_pre:
+        kw_pre["position_ids"] = kw["position_ids"][:, :, :half]
+    lg, caches = lm.prefill(cfg, params, toks[:, :half], cache_len=S, **kw_pre)
+    errs = [float(jnp.abs(lg - full[:, half - 1]).max())]
+    for t in range(half, S):
+        pid = kw["position_ids"][:, :, t:t + 1] if "position_ids" in kw else None
+        lg, caches = lm.serve_step(cfg, params, caches, toks[:, t:t + 1], t,
+                                   position_ids=pid)
+        errs.append(float(jnp.abs(lg - full[:, t]).max()))
+    assert max(errs) < 1e-3, errs
+
+
+def test_param_counts_match_init():
+    for name in ARCH_NAMES:
+        cfg = reduced(get_config(name))
+        params = lm.init_params(RNG, cfg)
+        n_real = sum(x.size for x in jax.tree.leaves(params))
+        n_analytic = cfg.param_counts()["total"]
+        # analytic count excludes pos tables / tiny norms drift; 15% slack
+        assert abs(n_real - n_analytic) / n_real < 0.35, (
+            name, n_real, n_analytic)
+
+
+def test_full_config_param_counts():
+    """Analytic totals are in the advertised ballpark for the real configs."""
+    expect = {"qwen1.5-110b": 111e9, "grok-1-314b": 314e9,
+              "jamba-v0.1-52b": 52e9, "deepseek-v2-lite-16b": 16e9,
+              "llama3.2-3b": 3.2e9, "qwen3-4b": 4e9}
+    for name, target in expect.items():
+        n = get_config(name).param_counts()["total"]
+        assert 0.6 * target < n < 1.45 * target, (name, n, target)
+
+
+def test_cell_support_rules():
+    assert not cell_supported(get_config("qwen3-4b"), SHAPES["long_500k"])[0]
+    assert cell_supported(get_config("rwkv6-1.6b"), SHAPES["long_500k"])[0]
+    assert cell_supported(get_config("jamba-v0.1-52b"), SHAPES["long_500k"])[0]

@@ -1,0 +1,51 @@
+"""NAS: GP regression quality, BO vs random, Pareto front correctness."""
+import numpy as np
+
+from repro.nas.gp import GP
+from repro.nas.nested import bo_minimize, expected_improvement, pareto_front
+from repro.nas.space import Dim, Space
+
+
+def test_gp_fits_smooth_function():
+    rng = np.random.default_rng(0)
+    X = rng.uniform(0, 1, (40, 2))
+    y = np.sin(3 * X[:, 0]) + X[:, 1] ** 2
+    gp = GP().fit(X, y)
+    Xs = rng.uniform(0.1, 0.9, (64, 2))
+    mu, sd = gp.predict(Xs)
+    ys = np.sin(3 * Xs[:, 0]) + Xs[:, 1] ** 2
+    assert np.sqrt(np.mean((mu - ys) ** 2)) < 0.15
+    assert (sd > 0).all()
+
+
+def test_bo_beats_random_on_branin_like():
+    def f(cfg):
+        x, y = cfg["x"], cfg["y"]
+        return (x - 0.3) ** 2 + 2 * (y - 0.7) ** 2
+
+    space = Space([Dim("x", 0, 1), Dim("y", 0, 1)])
+    _, best_bo, hist = bo_minimize(f, space, iters=20, init=5, seed=0,
+                                   stall=20)
+    rng = np.random.default_rng(0)
+    best_rand = min(f(space.decode(u)) for u in space.sample(rng, 20))
+    assert best_bo <= best_rand * 1.5
+    assert best_bo < 0.05
+
+
+def test_ei_positive_where_uncertain():
+    ei = expected_improvement(np.array([0.5, 1.5]), np.array([0.5, 0.01]),
+                              best=1.0)
+    assert ei[0] > ei[1]
+
+
+def test_pareto_front():
+    pts = [(1, 5), (2, 2), (5, 1), (3, 3), (6, 6)]
+    front = pareto_front(pts)
+    assert set(front) == {0, 1, 2}
+
+
+def test_space_decode_kinds():
+    s = Space([Dim("a", 2, 12, "int"), Dim("b", 64, 4096, "log2"),
+               Dim("c", 0.1, 0.8)])
+    cfg = s.decode([0.0, 1.0, 0.5])
+    assert cfg["a"] == 2 and cfg["b"] == 4096 and 0.4 < cfg["c"] < 0.5

@@ -1,0 +1,76 @@
+"""NN module system + serialization + database + engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.database import SurrogateDB
+from repro.core.engine import InferenceEngine
+from repro.nn import CNN, MLP, from_spec
+from repro.nn.serialize import load_model, save_model
+
+
+def test_mlp_shapes_and_grads():
+    net = MLP((1, 8), [32, 16], 2, act="gelu")
+    p = net.init(jax.random.PRNGKey(0))
+    x = jnp.ones((5, 8))
+    y = net.apply(p, x)
+    assert y.shape == (5, 2)
+    g = jax.grad(lambda p: net.apply(p, x).sum())(p)
+    assert max(float(jnp.abs(l).max()) for l in jax.tree.leaves(g)) > 0
+
+
+def test_cnn_shapes():
+    net = CNN((1, 24, 24, 1), [(8, 5, 2)], [32], 2, pool=2)
+    p = net.init(jax.random.PRNGKey(0))
+    y = net.apply(p, jnp.ones((3, 24, 24, 1)))
+    assert y.shape == (3, 2)
+
+
+def test_serialize_roundtrip(tmp_path):
+    net = MLP((1, 4), [16], 1)
+    p = net.init(jax.random.PRNGKey(1))
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(7, 4)).astype(np.float32))
+    y0 = net.apply(p, x)
+    save_model(tmp_path / "m", net, p, extra={"note": "hi"})
+    net2, p2, spec = load_model(tmp_path / "m")
+    np.testing.assert_array_equal(np.asarray(net2.apply(p2, x)),
+                                  np.asarray(y0))
+    assert spec["extra"]["note"] == "hi"
+
+
+def test_from_spec_rebuild():
+    net = CNN((1, 8, 8, 2), [(4, 3, 1)], [], 3)
+    net2 = from_spec(net.spec())
+    assert net2.out_shape() == net.out_shape()
+
+
+def test_engine_caches_and_normalizes(tmp_path):
+    from repro.nas.train_surrogate import fit
+    rng = np.random.default_rng(0)
+    X = (rng.normal(size=(1024, 3)) * 10 + 5).astype(np.float32)
+    Y = (X.sum(1, keepdims=True) * 3).astype(np.float32)
+    net = MLP((1, 3), [32], 1)
+    p, rmse, stats = fit(net, X, Y, epochs=60, lr=1e-2)
+    path = save_model(tmp_path / "m", net, p, extra=stats)
+    e1 = InferenceEngine.get(path)
+    e2 = InferenceEngine.get(path)
+    assert e1 is e2  # loaded once (paper §IV-B)
+    pred = np.asarray(e1(jnp.asarray(X[:64])))
+    denorm_rmse = float(np.sqrt(np.mean((pred - Y[:64]) ** 2)))
+    # the deployed engine (with norm stats from the bundle) must reproduce
+    # training-quality predictions — deploy error tracks validation error
+    assert denorm_rmse < max(2.5 * rmse, 0.5 * float(np.abs(Y).mean()))
+
+
+def test_database_groups_and_split(tmp_path):
+    db = SurrogateDB(tmp_path / "db")
+    g = db.group("r1")
+    for i in range(3):
+        g.append(np.ones((10, 4)) * i, np.ones((10, 2)) * i, 0.1 * (i + 1))
+    g.flush()
+    d = g.load()
+    assert d["inputs"].shape == (30, 4)
+    assert d["runtime"].tolist() == [0.1, 0.2, 0.30000000000000004]
+    tr, te = g.train_test_split(0.25, seed=1)
+    assert tr["inputs"].shape[0] == 22 and te["inputs"].shape[0] == 8
+    assert "r1" in db.groups()

@@ -1,0 +1,91 @@
+"""Execution control: collect / infer / predicated semantics."""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import approx_ml, tensor_functor
+from repro.nas.train_surrogate import fit
+from repro.nn import MLP
+from repro.nn.serialize import save_model
+
+_ifn = tensor_functor("rin: [i, 0:2] = ([i, 0:2])")
+_ofn = tensor_functor("rout: [i, 0:1] = ([i, 0:1])")
+N = 128
+
+
+def _fn(x):
+    return {"out": (x[:, :1] * 2 + x[:, 1:] * 0.5)}
+
+
+def _mk(tmp, mode, model=None, db=None):
+    rngs = {"i": (0, N)}
+    return approx_ml(_fn, name="lin",
+                     inputs={"x": (_ifn, rngs)}, outputs={"out": (_ofn, rngs)},
+                     mode=mode, model=model, database=db)
+
+
+@pytest.fixture(scope="module")
+def model_path(tmp_path_factory):
+    tmp = tmp_path_factory.mktemp("region")
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(2048, 2)).astype(np.float32)
+    Y = X[:, :1] * 2 + X[:, 1:] * 0.5
+    net = MLP((1, 2), [32], 1)
+    params, rmse, stats = fit(net, X, Y, epochs=80, lr=3e-3)
+    assert rmse < 0.25
+    return save_model(tmp / "m", net, params, extra=stats)
+
+
+def test_collect_writes_database(tmp_path):
+    r = _mk(tmp_path, "collect", db=str(tmp_path / "db"))
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(N, 2)).astype(np.float32))
+    out = r(x=x)
+    np.testing.assert_allclose(np.asarray(out["out"]), np.asarray(_fn(x)["out"]))
+    r.db.flush()
+    d = r.db.group("lin").load()
+    assert d["inputs"].shape == (N, 2)
+    assert d["outputs"].shape == (N, 1)
+    assert d["runtime"].shape == (1,) and d["runtime"][0] > 0
+
+
+def test_infer_replaces_region(tmp_path, model_path):
+    r = _mk(tmp_path, "infer", model=str(model_path))
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(N, 2)).astype(np.float32))
+    y = r(x=x)["out"]
+    ref = _fn(x)["out"]
+    assert float(jnp.sqrt(jnp.mean((y - ref) ** 2))) < 0.2
+
+
+def test_predicated_eager_and_traced(tmp_path, model_path):
+    r = _mk(tmp_path, "predicated", model=str(model_path))
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(N, 2)).astype(np.float32))
+    ref = _fn(x)["out"]
+    # eager
+    acc = r(predicate=False, x=x)["out"]
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(ref), rtol=1e-6)
+    ml = r(predicate=True, x=x)["out"]
+    assert float(jnp.abs(ml - ref).max()) < 1.0
+    # traced: both paths in one program (lax.cond)
+    f = jax.jit(lambda x, p: r(predicate=p, x=x)["out"])
+    np.testing.assert_allclose(np.asarray(f(x, False)), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(f(x, True)), np.asarray(ml),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_collect_inside_jit_taps(tmp_path):
+    r = _mk(tmp_path, "collect", db=str(tmp_path / "dbjit"))
+    x = jnp.ones((N, 2))
+
+    @jax.jit
+    def step(x):
+        return r(x=x)["out"]
+
+    y = step(x)
+    jax.block_until_ready(y)
+    r.db.flush()
+    d = r.db.group("lin").load()
+    assert d["inputs"].shape[0] == N
