@@ -13,11 +13,26 @@ Layout:
 """
 from __future__ import annotations
 
+import atexit
 import json
 import pathlib
 import threading
+import weakref
 
 import numpy as np
+
+# collect-mode rows buffered below chunk_rows must never be lost to process
+# exit: every live store flushes at interpreter shutdown
+_LIVE_STORES: "weakref.WeakSet[RegionStore]" = weakref.WeakSet()
+
+
+@atexit.register
+def _flush_all_at_exit():
+    for store in list(_LIVE_STORES):
+        try:
+            store.flush()
+        except Exception:
+            pass  # shutdown best-effort; a partial flush must not mask exit
 
 
 class RegionStore:
@@ -28,6 +43,7 @@ class RegionStore:
         self.chunk_rows = chunk_rows
         self._buf_in, self._buf_out, self._buf_rt = [], [], []
         self._lock = threading.Lock()
+        _LIVE_STORES.add(self)
 
     # -------------------------------------------------------- writing -----
     def append(self, inputs, outputs, runtime: float):
@@ -45,17 +61,44 @@ class RegionStore:
                 self._flush_locked()
 
     def _flush_locked(self):
-        idx = len(list(self.dir.glob("chunk_*.npz")))
+        existing = sorted(self.dir.glob("chunk_*.npz"))
+        idx = len(existing)
+        inputs = np.concatenate(self._buf_in, axis=0)
+        outputs = np.concatenate(self._buf_out, axis=0)
+        in_shape, out_shape = list(inputs.shape[1:]), list(outputs.shape[1:])
+
+        # meta.json describes the FULL store, not just the last flush
+        meta_path = self.dir / "meta.json"
+        prior = json.loads(meta_path.read_text()) if meta_path.exists() \
+            else None
+        if prior is not None:
+            # schema drift is refused BEFORE anything touches disk: the
+            # mismatched buffer is dropped so retries (and the atexit
+            # flush) cannot corrupt or duplicate the store
+            for key, shape in (("input_shape", in_shape),
+                               ("output_shape", out_shape)):
+                if prior.get(key) is not None and prior[key] != shape:
+                    self._buf_in, self._buf_out, self._buf_rt = [], [], []
+                    raise ValueError(
+                        f"region {self.name!r}: {key} changed from "
+                        f"{prior[key]} to {shape}; refusing to mix schemas")
+        rows = int(inputs.shape[0])
+        if prior is not None and "rows" in prior:
+            rows += int(prior["rows"])
+        else:  # legacy store without row accounting: scan once
+            for c in existing:
+                with np.load(c) as z:
+                    rows += int(z["inputs"].shape[0])
+
         np.savez(
             self.dir / f"chunk_{idx:05d}.npz",
-            inputs=np.concatenate(self._buf_in, axis=0),
-            outputs=np.concatenate(self._buf_out, axis=0),
+            inputs=inputs,
+            outputs=outputs,
             runtime=np.asarray(self._buf_rt, np.float64),
         )
-        meta = {"region": self.name, "chunks": idx + 1,
-                "input_shape": list(self._buf_in[0].shape[1:]),
-                "output_shape": list(self._buf_out[0].shape[1:])}
-        (self.dir / "meta.json").write_text(json.dumps(meta))
+        meta = {"region": self.name, "chunks": idx + 1, "rows": rows,
+                "input_shape": in_shape, "output_shape": out_shape}
+        meta_path.write_text(json.dumps(meta))
         self._buf_in, self._buf_out, self._buf_rt = [], [], []
 
     # -------------------------------------------------------- reading -----

@@ -1,22 +1,48 @@
 """Inference engine: loads a model bundle once, jit-compiles its apply, and
 serves region invocations (the Torch-C++ role in the paper's runtime).
 
-Supports sharded inference: with a mesh installed, inputs are constrained
-over the ``data`` axis, so surrogate batches scale across chips like any
-other data-parallel workload.  On TPU the engine routes pure-MLP bundles
-through the ``fused_mlp`` Pallas kernel (all layers resident in VMEM —
-the paper's Observation 2, hardware-utilization, reinterpreted for TPU).
+Supports sharded inference: with a mesh installed (``repro.dist.sharding
+.use_mesh``), surrogate batches are placed and constrained over the
+``data`` axis, so ``MLRegion`` inference scales across chips like any
+other data-parallel workload — the compiled apply is cached per sharding
+context, so the same engine serves eager CPU calls and sharded meshes.
+On TPU the engine routes pure-MLP bundles through the ``fused_mlp``
+Pallas kernel (all layers resident in VMEM — the paper's Observation 2,
+hardware-utilization, reinterpreted for TPU).
+
+Bundles retrained in-process (the NAS loop rewrites ``params.npz``) are
+not served stale: ``get()`` re-reads a bundle whose on-disk fingerprint
+(mtime_ns + size) changed since load, and ``invalidate()``/``reload()``
+force it — retrain paths that bypass the fingerprint (exotic filesystems
+with coarse timestamps) should call ``invalidate()`` after writing.
 """
 from __future__ import annotations
 
-import functools
+import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.dist.sharding import constrain
+from repro.dist.sharding import constrain, current_ctx
 from repro.nn.serialize import load_model
+
+
+def _bundle_mtime(path: str) -> tuple:
+    """(mtime_ns, size) fingerprint of the bundle files.
+
+    ns resolution closes the same-second rewrite window on modern
+    filesystems; in-process retrain paths (nas.nested.save_trial) call
+    invalidate() explicitly and do not rely on this.
+    """
+    newest, total = 0, 0
+    for name in ("spec.json", "params.npz"):
+        f = os.path.join(path, name)
+        if os.path.exists(f):
+            stat = os.stat(f)
+            newest = max(newest, stat.st_mtime_ns)
+            total += stat.st_size
+    return (newest, total)
 
 
 class InferenceEngine:
@@ -24,17 +50,42 @@ class InferenceEngine:
 
     def __init__(self, model_path: str, use_kernel: str = "auto"):
         self.path = str(model_path)
-        self.net, self.params, self.spec = load_model(model_path)
         self.use_kernel = use_kernel
-        self._apply = None
+        self._applies: dict = {}  # one compiled apply per sharding context
+        self._load()
+
+    def _load(self):
+        self.net, self.params, self.spec = load_model(self.path)
+        self._mtime = _bundle_mtime(self.path)
+        self._applies.clear()
 
     @classmethod
     def get(cls, model_path) -> "InferenceEngine":
-        """Process-wide cache: a model file is loaded once (paper §IV-B)."""
+        """Process-wide cache: a model file is loaded once (paper §IV-B).
+
+        A bundle rewritten on disk since it was loaded (NAS retraining)
+        is transparently reloaded in place, so long-lived regions holding
+        this engine see the fresh weights.
+        """
         key = str(model_path)
-        if key not in cls._cache:
-            cls._cache[key] = cls(key)
-        return cls._cache[key]
+        eng = cls._cache.get(key)
+        if eng is None:
+            eng = cls._cache[key] = cls(key)
+        elif _bundle_mtime(key) > eng._mtime:
+            eng.reload()
+        return eng
+
+    @classmethod
+    def invalidate(cls, model_path=None):
+        """Drop cached engine(s) so the next get() reloads from disk."""
+        if model_path is None:
+            cls._cache.clear()
+        else:
+            cls._cache.pop(str(model_path), None)
+
+    def reload(self):
+        """Re-read the bundle from disk and drop compiled applies."""
+        self._load()
 
     def _is_pure_mlp(self):
         kinds = [l["kind"] for l in self.spec["layers"]]
@@ -64,20 +115,37 @@ class InferenceEngine:
                 return net.apply(params, x)
 
         def apply_fn(params, x):
-            x = constrain(x, "data", None)
+            x = constrain(x, *(("data",) + (None,) * (x.ndim - 1)))
             if norm is not None:
                 x = (x - norm[0]) / norm[1]
             y = raw(params, x)
             if norm is not None:
                 y = y * norm[3] + norm[2]
-            return y
+            return constrain(y, *(("data",) + (None,) * (y.ndim - 1)))
 
-        self._apply = jax.jit(apply_fn)
+        return jax.jit(apply_fn)
+
+    def _apply_for(self, ctx):
+        """Compiled apply for the active sharding context (traced under it,
+        so the data-axis constraints bind to that mesh)."""
+        key = (ctx.mesh, ctx.multi_pod) if ctx is not None else None
+        fn = self._applies.get(key)
+        if fn is None:
+            fn = self._applies[key] = self._build()
+        return fn
 
     def __call__(self, x):
-        if self._apply is None:
-            self._build()
-        return self._apply(self.params, x)
+        ctx = current_ctx()
+        fn = self._apply_for(ctx)
+        if ctx is not None and ctx.mesh is not None and \
+                not isinstance(x, jax.core.Tracer):
+            # place the surrogate batch over the data axis before compute
+            # so per-chip work is batch/n_data_shards
+            sharding = ctx.sharding_for(
+                x.shape, ("data",) + (None,) * (x.ndim - 1))
+            if sharding is not None:
+                x = jax.device_put(x, sharding)
+        return fn(self.params, x)
 
     def infer_shape(self, in_shape):
         return self.net.out_shape()

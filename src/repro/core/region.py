@@ -100,9 +100,11 @@ class MLRegion:
 
     # ------------------------------------------------------- execution ----
     def engine(self) -> InferenceEngine:
-        if self._engine is None:
-            assert self.model_path, f"region {self.name}: no model path"
-            self._engine = InferenceEngine.get(self.model_path)
+        assert self.model_path, f"region {self.name}: no model path"
+        # always resolve through the process-wide cache: get() is a dict
+        # lookup + bundle-mtime stat, and it is what reloads a bundle the
+        # NAS loop retrained under this region's feet
+        self._engine = InferenceEngine.get(self.model_path)
         return self._engine
 
     def _infer(self, arrays: dict):

@@ -1,0 +1,195 @@
+"""Post-compile HLO analysis: collective traffic + roofline estimation.
+
+``collective_stats`` parses compiled HLO text (or a jax ``Compiled`` object)
+and accounts the bytes each cross-chip collective moves:
+
+  * all-gather       -> full gathered (output) size
+  * reduce-scatter   -> full reduced (operand) size
+  * all-reduce       -> 2x tensor size (ring = reduce-scatter + all-gather)
+  * all-to-all /
+    collective-permute -> tensor size, counted once
+
+Async pairs are counted at the ``-start`` op; ``-done`` ops are ignored so
+nothing is double-counted.  ``corrected_bytes`` re-prices f32/f64
+collectives at 2 bytes/element: the CPU dry-run backend emulates bf16
+arithmetic via f32 converts, so its HLO moves f32 over the wire where the
+TPU program moves bf16.
+
+``Roofline`` turns (FLOPs, HBM bytes, collective bytes) into the three
+classic time terms against per-chip peaks (defaults are v5e-like: 197
+TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI per chip) and reports the
+dominant bottleneck, the step-time bound, and the achievable-MFU bound.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_WIRE_F32_AS_BF16 = {"f32": 2, "f64": 2}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# opcode immediately followed by "(" (optionally via "-start"); "-done"
+# variants never match and async work is attributed to the start op
+_OP_RE = re.compile(
+    r"(?<![\w-])(" + "|".join(_COLLECTIVES) + r")(-start)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes_list(text: str, dtype_bytes: Dict[str, int]) -> list:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append(n * dtype_bytes.get(dtype, _DTYPE_BYTES[dtype]))
+    return out
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Per-kind collective counts and wire bytes for one HLO module."""
+
+    per_kind_count: Dict[str, int] = dataclasses.field(default_factory=dict)
+    per_kind_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    per_kind_corrected: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.per_kind_bytes.values()))
+
+    @property
+    def corrected_bytes(self) -> float:
+        """Total bytes with f32/f64 re-priced as bf16 on the wire."""
+        return float(sum(self.per_kind_corrected.values()))
+
+    def __str__(self) -> str:
+        parts = [f"{k}: n={self.per_kind_count[k]} "
+                 f"{self.per_kind_bytes[k]/1e9:.3f}GB"
+                 for k in sorted(self.per_kind_count)]
+        return "CollectiveStats(" + ", ".join(parts) + ")"
+
+
+def collective_stats(hlo) -> CollectiveStats:
+    """Extract collective traffic from HLO text or a Lowered/Compiled."""
+    if hasattr(hlo, "as_text"):
+        hlo = hlo.as_text()
+    st = CollectiveStats()
+    for line in hlo.splitlines():
+        m = _OP_RE.search(line)
+        if m is None:
+            continue
+        kind = m.group(1)
+        clean = re.sub(r'"[^"]*"', "", line)  # drop metadata strings
+        cut = clean.find(m.group(0))
+        left, right = clean[:cut], clean[cut:]
+        for prices, acc in ((_DTYPE_BYTES, st.per_kind_bytes),
+                            ({**_DTYPE_BYTES, **_WIRE_F32_AS_BF16},
+                             st.per_kind_corrected)):
+            in_bytes = sum(_shape_bytes_list(right, prices))
+            if m.group(2):
+                # async: the -start result tuple aliases the operand AND
+                # carries the full result, so summing the left side would
+                # double-count — but for all-gather the operand is only
+                # the shard, so the largest single left-side shape (the
+                # gathered result) is the honest wire size
+                left_shapes = _shape_bytes_list(left, prices)
+                out_bytes = max(left_shapes, default=0)
+            else:
+                out_bytes = sum(_shape_bytes_list(left, prices))
+            b = max(in_bytes, out_bytes)
+            if kind == "all-reduce":
+                b *= 2
+            acc[kind] = acc.get(kind, 0) + b
+        st.per_kind_count[kind] = st.per_kind_count.get(kind, 0) + 1
+    return st
+
+
+# ----------------------------------------------------------- roofline ------
+
+PEAK_FLOPS = 197e12   # per-chip bf16 FLOP/s
+HBM_BW = 819e9        # per-chip HBM bytes/s
+ICI_BW = 50e9         # per-chip interconnect bytes/s
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Three-term roofline over *global* (all-chip) resource totals.
+
+    model_flops is the analytic useful work (6ND / 2ND); the HLO FLOP
+    count includes remat recompute, so useful_flops_fraction < 1 and the
+    achievable MFU is bounded by useful-compute-time / step-time.
+    """
+
+    flops_global: float
+    hbm_bytes_global: float
+    coll_bytes_global: float
+    chips: int
+    model_flops: float
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_global / self.chips / self.peak_flops
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_global / self.chips / self.hbm_bw
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_global / self.chips / self.ici_bw
+
+    @property
+    def step_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        return self.model_flops / self.flops_global if self.flops_global else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Best achievable MFU at the roofline step time."""
+        if self.step_time_s <= 0:
+            return 0.0
+        useful_s = self.model_flops / self.chips / self.peak_flops
+        return useful_s / self.step_time_s
+
+    def to_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "step_time_s": self.step_time_s,
+            "dominant": self.dominant,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "mfu_bound": self.mfu_bound,
+            "chips": self.chips,
+            "flops_global": self.flops_global,
+            "hbm_bytes_global": self.hbm_bytes_global,
+            "coll_bytes_global": self.coll_bytes_global,
+        }

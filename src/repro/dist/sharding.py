@@ -1,0 +1,270 @@
+"""Logical-axis sharding: contexts, constraint lowering, spec derivation.
+
+Model and runtime code never names physical mesh axes.  It names *logical*
+axes — "batch", "seq", "ffn", "vocab", ... — and an active :class:`ShardCtx`
+(installed with :func:`use_mesh`) resolves them against whatever mesh is
+live.  Resolution is per-dimension and degrades gracefully:
+
+  * no active mesh            -> :func:`constrain` is a no-op (eager CPU
+                                 tests and eager region calls keep working);
+  * axis absent / size 1      -> that dimension replicates;
+  * size not divisible        -> candidate axes are dropped outer-first
+                                 until the remainder divides (never crashes);
+  * axis already claimed      -> later dimensions of the same spec fall
+                                 through to their next candidate (e.g. MoE:
+                                 "experts" takes "model" when E divides it,
+                                 otherwise the feature dim takes it).
+
+Logical -> physical mapping (mesh axes: "pod", "data", "model"):
+
+  batch/data -> (pod,) data      fsdp    -> data      (ZeRO-style weights)
+  seq        -> model            kvseq   -> model     (decode KV cache)
+  longseq    -> data+model       heads/ffn/vocab/dinner/experts -> model
+
+Because "seq" and "ffn" both map to "model", a constraint listing both
+(`constrain(h, "batch", "seq", "ffn")`) is claimed left-to-right: training
+and prefill run sequence-parallel, while decode (seq dim of 1 is never
+divisible) falls through to tensor-parallel on the ffn dim — one constraint
+string serves both regimes.
+
+``param_spec_tree`` / ``cache_spec_tree`` derive PartitionSpec pytrees for
+LM params (and their mirrored optimizer-state copies) and KV caches from
+the *name* of each leaf, right-aligned to its rank, so vmapped layer stacks
+(leading repeat axis) and optimizer mirrors need no special-casing.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# ------------------------------------------------------- logical mapping ---
+
+# ordered outer -> inner; resolution drops candidates outer-first
+_LOGICAL_TO_MESH = {
+    "batch": ("pod", "data"),
+    "data": ("pod", "data"),
+    "fsdp": ("data",),
+    "seq": ("model",),
+    "kvseq": ("model",),
+    "longseq": ("data", "model"),
+    "heads": ("model",),
+    "ffn": ("model",),
+    "dinner": ("model",),
+    "vocab": ("model",),
+    "model": ("model",),
+    "experts": ("model",),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """The active mesh + axis roles. Immutable; cheap to construct."""
+
+    mesh: Any = None
+    multi_pod: bool = False
+
+    def _candidates(self, logical: str) -> Tuple[str, ...]:
+        axes = _LOGICAL_TO_MESH.get(logical, ())
+        if not self.multi_pod:
+            axes = tuple(a for a in axes if a != "pod")
+        if self.mesh is None:
+            return ()
+        return tuple(a for a in axes
+                     if self.mesh.shape.get(a, 1) > 1)
+
+    def axis_size(self, logical: str) -> int:
+        """Total shard count a logical axis resolves to (1 if unmapped)."""
+        n = 1
+        for a in self._candidates(logical):
+            n *= self.mesh.shape[a]
+        return n
+
+    def spec_for(self, shape: Sequence[int],
+                 logical_axes: Sequence[Optional[str]]) -> P:
+        """PartitionSpec for `shape`, one logical name (or None) per dim."""
+        assert len(shape) == len(logical_axes), (shape, logical_axes)
+        used: set = set()
+        entries = []
+        for dim, name in zip(shape, logical_axes):
+            if name is None or self.mesh is None:
+                entries.append(None)
+                continue
+            cand = [a for a in self._candidates(name) if a not in used]
+            while cand:
+                n = 1
+                for a in cand:
+                    n *= self.mesh.shape[a]
+                if n > 1 and dim % n == 0:
+                    break
+                cand = cand[1:]  # drop outermost first
+            if not cand:
+                entries.append(None)
+                continue
+            used.update(cand)
+            entries.append(cand[0] if len(cand) == 1 else tuple(cand))
+        return P(*entries)
+
+    def sharding_for(self, shape, logical_axes) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec_for(shape, logical_axes))
+
+
+# ------------------------------------------------------------- context -----
+
+_state = threading.local()
+
+
+def _stack():
+    if not hasattr(_state, "ctxs"):
+        _state.ctxs = []
+    return _state.ctxs
+
+
+def current_ctx() -> Optional[ShardCtx]:
+    """The innermost active ShardCtx, or None outside any use_mesh()."""
+    s = _stack()
+    return s[-1] if s else None
+
+
+@contextlib.contextmanager
+def use_mesh(mesh, multi_pod: bool = False):
+    """Install `mesh` as the active sharding context for this thread."""
+    ctx = ShardCtx(mesh, multi_pod)
+    s = _stack()
+    s.append(ctx)
+    try:
+        yield ctx
+    finally:
+        s.pop()
+
+
+def constrain(x, *logical_axes):
+    """`with_sharding_constraint` under an active mesh; no-op otherwise.
+
+    Applies only to tracers: eager arrays pass through untouched, so the
+    same model code runs in plain-CPU tests, eager region calls, and
+    sharded jit programs.
+    """
+    ctx = current_ctx()
+    if ctx is None or ctx.mesh is None:
+        return x
+    if not isinstance(x, jax.core.Tracer):
+        return x
+    spec = ctx.spec_for(x.shape, logical_axes)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+# ----------------------------------------------------- spec derivation -----
+
+# trailing-dim logical axes per parameter leaf name (right-aligned, so the
+# vmapped stack's leading repeat axis and fp32 optimizer mirrors just work)
+_PARAM_RULES = {
+    "tok_embed": ("vocab", "fsdp"),
+    "lm_head": ("fsdp", "vocab"),
+    "pos_embed": (None, "fsdp"),
+    # dense / GLU MLPs (also the serve-time FFN surrogate w1/w2)
+    "w1": ("fsdp", "ffn"), "w3": ("fsdp", "ffn"), "w2": ("ffn", "fsdp"),
+    "w_up": ("fsdp", "ffn"), "w_down": ("ffn", "fsdp"),
+    "wk_cm": ("fsdp", "ffn"), "wv_cm": ("ffn", "fsdp"), "wr_cm": ("fsdp", None),
+    # attention (gqa + cross + mla)
+    "wq": ("fsdp", "heads"), "wk": ("fsdp", "heads"), "wv": ("fsdp", "heads"),
+    "wo": ("heads", "fsdp"),
+    "w_q": ("fsdp", "heads"), "w_dkv": ("fsdp", None), "w_kr": ("fsdp", None),
+    "w_ukv": (None, "heads"),
+    # rwkv6
+    "wr_tm": ("fsdp", "heads"), "wk_tm": ("fsdp", "heads"),
+    "wv_tm": ("fsdp", "heads"), "wg_tm": ("fsdp", "heads"),
+    "lora_a_mix": ("fsdp", None), "lora_b_mix": (None, None, "heads"),
+    "lora_a_w": ("fsdp", None), "lora_b_w": (None, "heads"),
+    # mamba
+    "w_in": ("fsdp", "dinner"), "conv_w": (None, "dinner"),
+    "w_x": ("dinner", None), "w_dt": (None, "dinner"),
+    "w_out": ("dinner", "fsdp"),
+    # moe: experts take "model" (EP) when E divides it; otherwise the
+    # ffn dim claims it (matches the dispatch constraints in blocks.py)
+    "w_router": ("fsdp", None),
+    "we1": ("experts", "fsdp", "ffn"), "we3": ("experts", "fsdp", "ffn"),
+    "we2": ("experts", "ffn", "fsdp"),
+    "ws1": ("fsdp", "ffn"), "ws3": ("fsdp", "ffn"), "ws2": ("ffn", "fsdp"),
+}
+
+
+def _cache_rules(long_ctx: bool):
+    seq = "longseq" if long_ctx else "kvseq"
+    return {
+        "k": ("batch", seq, None, None),
+        "v": ("batch", seq, None, None),
+        "k_scale": ("batch", seq, None),
+        "v_scale": ("batch", seq, None),
+        "ckv": ("batch", seq, None),
+        "kr": ("batch", seq, None),
+        "S": ("batch", "heads", None, None),
+        "x_last": ("batch", None),
+        "conv": ("batch", None, "dinner"),
+        "h": ("batch", "dinner", None),
+        "cm_x_last": ("batch", None, None),
+        "cross_k": ("batch", None, None, None),
+        "cross_v": ("batch", None, None, None),
+    }
+
+
+def _leaf_name(path) -> Optional[str]:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+        if isinstance(entry, jax.tree_util.GetAttrKey):
+            return str(entry.name)
+    return None
+
+
+def _spec_from_rules(ctx: ShardCtx, rules: dict, path, leaf) -> P:
+    shape = tuple(leaf.shape)
+    if not shape:
+        return P()
+    rule = rules.get(_leaf_name(path))
+    if rule is None:
+        # unknown leaves (norm scales, biases, mixing coefficients, ...)
+        # replicate: sharding decisions stay explicit, replication is
+        # always correct
+        return P(*([None] * len(shape)))
+    n = len(shape)
+    axes = rule[-n:] if len(rule) >= n else (None,) * (n - len(rule)) + tuple(rule)
+    return ctx.spec_for(shape, axes)
+
+
+def param_spec_tree(tree, cfg, mesh=None, multi_pod: bool = False):
+    """PartitionSpec pytree for LM params or a full train state.
+
+    `tree` is any pytree of arrays/ShapeDtypeStructs whose leaf *names*
+    follow models/lm.py + optim/adamw.py (optimizer m/v/master mirrors the
+    param names, so one rule table covers both).  `cfg` is accepted for
+    call-site symmetry with cache_spec_tree; rules are name-driven.
+    """
+    del cfg
+    ctx = ShardCtx(mesh, multi_pod)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_from_rules(ctx, _PARAM_RULES, path, leaf),
+        tree)
+
+
+def cache_spec_tree(tree, cfg, mesh=None, multi_pod: bool = False, *,
+                    long_ctx: bool = False):
+    """PartitionSpec pytree for decode caches (models/lm.py layout).
+
+    `long_ctx=True` switches the KV sequence dim from "kvseq" (model axis)
+    to "longseq" (data+model): the 500k-context cell has global batch 1, so
+    the batch dim replicates and the sequence dim takes every chip.
+    """
+    del cfg
+    ctx = ShardCtx(mesh, multi_pod)
+    rules = _cache_rules(long_ctx)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_from_rules(ctx, rules, path, leaf),
+        tree)

@@ -48,6 +48,8 @@ def _compile(cfg, shape, mesh, multi_pod):
 
 def _cost(compiled):
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # pre-0.5 jax: one dict per program
+        ca = ca[0] if ca else {}
     return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0))
 
 
@@ -62,7 +64,7 @@ def _model_flops(cfg, shape):
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool, outdir: pathlib.Path,
              force: bool = False, variant: str = "baseline",
-             cfg_override=None) -> dict:
+             cfg_override=None, shape_override=None) -> dict:
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
     tag = f"{arch}__{shape_name}__{mesh_name}__{variant}"
     outpath = outdir / f"{tag}.json"
@@ -70,7 +72,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, outdir: pathlib.Path,
         return json.loads(outpath.read_text())
 
     cfg = cfg_override if cfg_override is not None else get_config(arch)
-    shape = SHAPES[shape_name]
+    shape = shape_override if shape_override is not None else SHAPES[shape_name]
     ok, why = cell_supported(cfg, shape)
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
            "variant": variant}
@@ -193,6 +195,30 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, outdir: pathlib.Path,
     return rec
 
 
+def run_smoke(outdir: pathlib.Path, force: bool = False) -> dict:
+    """Compile one tiny sharded train cell on the 256-chip host mesh.
+
+    Fast proof (CI smoke) that the dist substrate partitions a real
+    program: must report non-zero collective bytes or it exits non-zero.
+    """
+    from repro.configs.base import LayerSpec, ModelConfig, ShapeCell
+    tiny = ModelConfig(name="smoke-tiny", n_layers=2, d_model=256,
+                       n_heads=16, n_kv_heads=8, head_dim=16, d_ff=512,
+                       vocab_size=1024, pattern=(LayerSpec(),))
+    shape = ShapeCell("smoke_train", 512, 256, "train")
+    rec = run_cell("smoke-tiny", "smoke_train", False, outdir, force=force,
+                   variant="smoke", cfg_override=tiny, shape_override=shape)
+    coll = rec.get("raw_full", {}).get("coll_bytes", 0)
+    print(f"[smoke] status={rec.get('status')} "
+          f"compile={rec.get('compile_s', 0)}s "
+          f"coll_bytes/dev={coll:.3e} "
+          f"counts={rec.get('raw_full', {}).get('coll_counts')}", flush=True)
+    if rec.get("status") != "ok" or not coll:
+        raise SystemExit(f"smoke cell failed: {rec.get('status')} "
+                         f"coll_bytes={coll}")
+    return rec
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
@@ -200,9 +226,14 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--force", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--out", default=str(ARTIFACTS))
     args = ap.parse_args()
     outdir = pathlib.Path(args.out)
+
+    if args.smoke:
+        run_smoke(outdir, force=args.force)
+        return
 
     if args.all:
         jobs = []

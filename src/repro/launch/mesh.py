@@ -9,7 +9,15 @@ links.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 explicit-sharding API; absent on the pinned 0.4.x
+    from jax.sharding import AxisType
+
+    def _axis_kwargs(n_axes):
+        return {"axis_types": (AxisType.Auto,) * n_axes}
+except ImportError:  # pre-AxisType jax: all mesh axes are implicitly auto
+    def _axis_kwargs(n_axes):
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -26,8 +34,7 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"platform devices")
     import numpy as np
     return jax.sharding.Mesh(
-        np.asarray(devices).reshape(shape), axes,
-        axis_types=(AxisType.Auto,) * len(axes))
+        np.asarray(devices).reshape(shape), axes, **_axis_kwargs(len(axes)))
 
 
 def make_local_mesh(shape=None, axes=("data", "model")):
@@ -38,4 +45,4 @@ def make_local_mesh(shape=None, axes=("data", "model")):
         shape = (n, 1)
     return jax.sharding.Mesh(
         np.asarray(jax.devices()[:shape[0] * shape[1]]).reshape(shape), axes,
-        axis_types=(AxisType.Auto,) * len(axes))
+        **_axis_kwargs(len(axes)))

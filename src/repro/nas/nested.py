@@ -156,10 +156,17 @@ def nested_search(app, db_group, *, outer_iters=12, inner_iters=6, seed=0,
 
 
 def save_trial(trial, path):
-    """Persist a searched surrogate as a loadable model bundle."""
+    """Persist a searched surrogate as a loadable model bundle.
+
+    Invalidates any engine already serving this path, so regions pick up
+    the retrained weights instead of the process-wide cached ones.
+    """
+    from repro.core.engine import InferenceEngine
     from repro.nn.serialize import save_model
-    return save_model(path, trial["net"], trial["params"],
-                      extra=trial["stats"])
+    out = save_model(path, trial["net"], trial["params"],
+                     extra=trial["stats"])
+    InferenceEngine.invalidate(out)
+    return out
 
 
 def best_trial(result, weight_error=1.0):

@@ -1,0 +1,71 @@
+"""Deterministic stand-in for `hypothesis` when it isn't installed.
+
+The offline image has no hypothesis wheel; conftest.py installs this shim
+into sys.modules only in that case, so environments with the real package
+keep true shrinking/property testing.  The shim draws `max_examples`
+samples from a per-test seeded generator — same API subset the tests use
+(`given`, `settings`, `strategies.integers/sampled_from/booleans/floats`),
+fully deterministic across runs.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+import zlib
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.sampled_from = sampled_from
+strategies.booleans = booleans
+strategies.floats = floats
+
+
+def given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", 20)
+            rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                drawn = {k: s.sample(rng) for k, s in strats.items()}
+                fn(*args, **kwargs, **drawn)
+        wrapper._max_examples = 20
+        # hide the drawn parameters from pytest's fixture resolution
+        # (real hypothesis exposes a zero-arg signature the same way)
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = 20, deadline=None, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco

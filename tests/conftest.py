@@ -10,3 +10,12 @@ ROOT = pathlib.Path(__file__).resolve().parents[1]
 SRC = str(ROOT / "src")
 if SRC not in sys.path:
     sys.path.insert(0, SRC)
+if str(ROOT / "tests") not in sys.path:
+    sys.path.insert(0, str(ROOT / "tests"))
+
+try:  # offline image has no hypothesis wheel; shim keeps the suite runnable
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import _hypothesis_shim
+    sys.modules["hypothesis"] = _hypothesis_shim
+    sys.modules["hypothesis.strategies"] = _hypothesis_shim.strategies

@@ -62,6 +62,60 @@ def test_engine_caches_and_normalizes(tmp_path):
     assert denorm_rmse < max(2.5 * rmse, 0.5 * float(np.abs(Y).mean()))
 
 
+def test_engine_reload_after_retrain(tmp_path):
+    """A bundle rewritten on disk (NAS retraining) is never served stale."""
+    import os
+    net = MLP((1, 2), [8], 1)
+    p0 = net.init(jax.random.PRNGKey(0))
+    path = save_model(tmp_path / "m", net, p0)
+    x = jnp.ones((4, 2))
+    e1 = InferenceEngine.get(path)
+    y0 = np.asarray(e1(x))
+    # retrain: overwrite the bundle with scaled params, bump mtime past
+    # filesystem timestamp granularity
+    p1 = jax.tree.map(lambda w: w * 3.0, p0)
+    save_model(tmp_path / "m", net, p1)
+    future = os.path.getmtime(tmp_path / "m" / "params.npz") + 5
+    for f in ("spec.json", "params.npz"):
+        os.utime(tmp_path / "m" / f, (future, future))
+    e2 = InferenceEngine.get(path)
+    assert e2 is e1  # same serving object, refreshed in place
+    y1 = np.asarray(e2(x))
+    assert float(np.abs(y1 - y0).max()) > 1e-6
+    # explicit invalidation drops the process-wide entry entirely
+    InferenceEngine.invalidate(path)
+    e3 = InferenceEngine.get(path)
+    assert e3 is not e1
+
+
+def test_database_atexit_flush_and_full_store_meta(tmp_path):
+    import json
+    from repro.core import database as db_mod
+    db = SurrogateDB(tmp_path / "db")
+    g = db.group("r")
+    g.append(np.ones((6, 3)), np.ones((6, 2)), 0.1)  # below chunk_rows
+    db_mod._flush_all_at_exit()  # what interpreter shutdown runs
+    meta = json.loads((g.dir / "meta.json").read_text())
+    assert meta["rows"] == 6
+    # meta accounts the FULL store across flushes, not the last one
+    g.append(np.ones((4, 3)), np.ones((4, 2)), 0.2)
+    g.flush()
+    meta = json.loads((g.dir / "meta.json").read_text())
+    assert meta["rows"] == 10 and meta["chunks"] == 2
+    assert meta["input_shape"] == [3] and meta["output_shape"] == [2]
+    assert g.load()["inputs"].shape == (10, 3)
+    # schema drift is refused BEFORE touching disk: no bad chunk is
+    # written, the offending buffer is dropped, and the store stays usable
+    g.append(np.ones((2, 5)), np.ones((2, 2)), 0.3)
+    import pytest
+    with pytest.raises(ValueError):
+        g.flush()
+    assert len(sorted(g.dir.glob("chunk_*.npz"))) == 2
+    g.flush()  # retry (and the atexit hook) must not duplicate anything
+    assert len(sorted(g.dir.glob("chunk_*.npz"))) == 2
+    assert g.load()["inputs"].shape == (10, 3)
+
+
 def test_database_groups_and_split(tmp_path):
     db = SurrogateDB(tmp_path / "db")
     g = db.group("r1")
