@@ -18,6 +18,7 @@ def main() -> None:
     from benchmarks import tables
     from benchmarks.kernel_bench import kernel_bench
     from benchmarks.roofline import roofline_rows
+    from benchmarks.serve_bench import serving_throughput
 
     benches = {
         "loc_table": tables.loc_table,                 # paper Table II
@@ -28,6 +29,7 @@ def main() -> None:
         "interleave": tables.interleave,               # paper Fig 9d
         "kernel_bench": kernel_bench,                  # Pallas kernels
         "roofline": roofline_rows,                     # §Roofline (dry-run)
+        "serve_throughput": serving_throughput,        # repro.serve coalescing
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

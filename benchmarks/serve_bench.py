@@ -1,0 +1,145 @@
+"""Serving-throughput benchmark: per-call vs coalesced mesh-wide batching.
+
+Models the paper-at-scale regime: many independent callers (solver
+instances / ensemble members / sweep chunks), each invoking the same
+surrogate region with a small row block per sweep step.
+
+  * per-call   — every caller runs ``MLRegion._infer`` synchronously:
+                 one bridge + placement + jit dispatch per caller;
+  * coalesced  — callers enqueue on a ``ServeQueue``; one flush serves
+                 the whole sweep as a single padded mega-batch placed
+                 over the mesh ``data`` axis.
+
+Standalone (the CI smoke) forces an 8-device host platform so placement
+really spans a mesh:
+
+  PYTHONPATH=src python -m benchmarks.serve_bench --check
+
+``--check`` exits non-zero unless coalesced achieves >= CHECK_SPEEDUP x
+the per-call rows/s — the serving-regression gate.
+"""
+import os
+
+if __name__ == "__main__":  # must precede the first jax import
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+CHECK_SPEEDUP = 3.0
+
+
+def _bundle(path):
+    """A NAS-shaped MLP surrogate bundle (weights need not be trained:
+    throughput is architecture- and batch-shaped, not accuracy-shaped)."""
+    from repro.nn import MLP
+    from repro.nn.serialize import save_model
+    net = MLP((1, 5), [128, 128], 1)
+    params = net.init(jax.random.PRNGKey(0))
+    return save_model(path, net, params)
+
+
+def _measure(fn, reps=5, warmup=2):
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def serving_throughput(fast=False, *, n_callers=None, rows_per_call=8):
+    """CSV rows comparing per-call vs coalesced serving on the host mesh."""
+    import pathlib
+    import tempfile
+
+    import jax.numpy as jnp
+
+    from repro.apps import binomial
+    from repro.dist.sharding import use_mesh
+    from repro.launch.mesh import make_local_mesh
+    from repro.serve import FlushPolicy, ServeQueue
+
+    n_callers = n_callers or (16 if fast else 64)
+    total = n_callers * rows_per_call
+    tmp = pathlib.Path(tempfile.mkdtemp(prefix="serve_bench_"))
+    mp = _bundle(tmp / "surrogate")
+
+    ndev = len(jax.devices())
+    mesh_shape = (ndev, 1)
+    mesh = make_local_mesh(mesh_shape)
+    opts = binomial.make_inputs(total, seed=7)
+    chunks = [opts[i:i + rows_per_call] for i in range(0, total,
+                                                      rows_per_call)]
+
+    queue = ServeQueue(FlushPolicy(max_batch_rows=total,
+                                   max_pending_rows=4 * total))
+    r_sync = binomial.make_region(rows_per_call, mode="infer", model=mp)
+    r_async = binomial.make_region(rows_per_call, mode="infer_async",
+                                   model=mp, serving=queue)
+
+    with use_mesh(mesh):
+        def per_call():
+            outs = [r_sync(opts=c)["out"] for c in chunks]
+            jax.block_until_ready(outs)
+            return outs
+
+        def coalesced():
+            handles = [r_async(opts=c) for c in chunks]
+            queue.flush(mp, reason="sweep_step")
+            outs = [h.result()["out"] for h in handles]
+            jax.block_until_ready(outs)
+            return outs
+
+        t_call = _measure(per_call)
+        t_coal = _measure(coalesced)
+        # exactness: coalesced rows must match per-call rows bit-for-bit
+        same = all(
+            bool((np.asarray(a) == np.asarray(b)).all())
+            for a, b in zip(per_call(), coalesced()))
+
+    st = queue.stats(mp).snapshot()
+    rows_s_call = total / t_call
+    rows_s_coal = total / t_coal
+    speedup = rows_s_coal / rows_s_call
+    derived = (f"devices={ndev};callers={n_callers};"
+               f"rows_per_call={rows_per_call};"
+               f"percall_rows_s={rows_s_call:.0f};"
+               f"coalesced_rows_s={rows_s_coal:.0f};"
+               f"speedup_x={speedup:.2f};bitwise_equal={same};"
+               f"occupancy={st['batch_occupancy']:.2f};"
+               f"p50_ms={st['latency_p50_ms']:.2f};"
+               f"p99_ms={st['latency_p99_ms']:.2f}")
+    return [("serve_throughput/binomial", t_coal / n_callers * 1e6, derived)]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help=f"fail unless coalesced >= {CHECK_SPEEDUP}x per-call"
+                         " rows/s and outputs are bitwise equal")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    rows = serving_throughput(fast=args.fast)
+    print("name,us_per_call,derived")
+    for n, us, derived in rows:
+        print(f"{n},{us:.2f},{derived}", flush=True)
+    if args.check:
+        kv = dict(item.split("=") for item in rows[0][2].split(";"))
+        speedup = float(kv["speedup_x"])
+        same = kv["bitwise_equal"] == "True"
+        if speedup < CHECK_SPEEDUP or not same:
+            raise SystemExit(
+                f"serving smoke FAILED: speedup_x={speedup:.2f} "
+                f"(need >= {CHECK_SPEEDUP}) bitwise_equal={same}")
+        print(f"[serve smoke] OK: {speedup:.2f}x coalesced over per-call")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,14 +1,46 @@
 """Summarize dry-run artifacts: pick hillclimb targets, dump tables.
 
-  PYTHONPATH=src python benchmarks/summarize_dryrun.py
+  PYTHONPATH=src python benchmarks/summarize_dryrun.py [--markdown]
+
+``--markdown`` emits the EXPERIMENTS.md roofline table (one row per
+compiled cell: dominant bottleneck, step time, useful-FLOPs fraction,
+per-chip memory).
 """
 import json
 import pathlib
+import sys
 
 ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
 
 
+def markdown_table():
+    recs = [json.loads(p.read_text())
+            for p in sorted(ART.glob("*__baseline.json"))]
+    lines = ["| arch | shape | mesh | status | dominant | t_step (ms) | "
+             "useful FLOPs | MFU bound | resident GB/chip | coll GB/dev |",
+             "|---|---|---|---|---|---:|---:|---:|---:|---:|"]
+    for r in recs:
+        status = r.get("status", "?")
+        if status != "ok":
+            short = status if len(status) < 40 else status[:37] + "..."
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"{short} | | | | | | |")
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {rf['dominant']} | {rf['step_time_s'] * 1e3:.1f} "
+            f"| {rf['useful_flops_fraction'] * 100:.0f}% "
+            f"| {rf['mfu_bound'] * 100:.1f}% "
+            f"| {r['analytic']['est_hbm_per_chip'] / 1e9:.2f} "
+            f"| {r['coll_bytes_corrected_per_dev'] / 1e9:.2f} |")
+    return "\n".join(lines)
+
+
 def main():
+    if "--markdown" in sys.argv:
+        print(markdown_table())
+        return
     recs = []
     for p in sorted(ART.glob("*__baseline.json")):
         r = json.loads(p.read_text())

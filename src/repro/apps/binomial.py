@@ -62,13 +62,31 @@ def accurate(opts):
     return {"out": prices(opts)[:, None]}
 
 
-def make_region(n, mode="collect", model=None, database=None):
+def make_region(n, mode="collect", model=None, database=None, serving=None):
     rngs = {"i": (0, n)}
     return approx_ml(lambda opts: {"out": prices(opts)[:, None]},
                      name="binomial",
                      inputs={"opts": (_ifn, rngs)},
                      outputs={"out": (_ofn, rngs)},
-                     mode=mode, model=model, database=database)
+                     mode=mode, model=model, database=database,
+                     serving=serving)
+
+
+def price_chunks_async(opts, region, queue, chunk: int):
+    """Price a sweep of option chunks through the serve queue.
+
+    Models the paper's many-caller regime: each chunk of ``chunk``
+    options is an independent region invocation (a separate solver
+    instance / sweep step); all of a sweep's chunks are enqueued, then
+    one flush coalesces them into a single mesh-wide batch.  ``region``
+    must be ``make_region(chunk, mode="infer_async", serving=queue)``.
+    """
+    assert region.mode == "infer_async" and region.serving is queue
+    n = opts.shape[0]
+    assert n % chunk == 0, (n, chunk)
+    handles = [region(opts=opts[i:i + chunk]) for i in range(0, n, chunk)]
+    queue.flush(region.model_path, reason="sweep_step")
+    return jnp.concatenate([h.result()["out"] for h in handles], axis=0)
 
 
 def qoi_error(ref, approx):

@@ -69,12 +69,13 @@ def accurate(state):
     return {"state": timestep(state)}
 
 
-def make_region(mode="collect", model=None, database=None):
+def make_region(mode="collect", model=None, database=None, serving=None):
     return approx_ml(lambda state: {"state": timestep(state)},
                      name="miniweather",
                      inputs={"state": (stencil_fn, RANGES)},
                      outputs={"state": (point_fn, RANGES)},
-                     mode=mode, model=model, database=database)
+                     mode=mode, model=model, database=database,
+                     serving=serving)
 
 
 def run(state, steps, region=None, interleave=(0, 1), predicate_fn=None):
@@ -88,6 +89,24 @@ def run(state, steps, region=None, interleave=(0, 1), predicate_fn=None):
         else:
             state = region(predicate=use_ml, state=state)["state"]
     return state
+
+
+def run_ensemble_async(states, steps, region, queue):
+    """Advance an ensemble of trajectories through a serve queue.
+
+    A single trajectory is auto-regressive — its surrogate calls cannot
+    batch with each other — but an *ensemble* of E members can: every
+    sweep step enqueues E one-grid requests (mode="infer_async") that
+    the queue coalesces into one mesh-wide batch, so surrogate inference
+    is E-way batched even though each member still steps sequentially.
+    """
+    assert region.mode == "infer_async" and region.serving is queue
+    states = list(states)
+    for _ in range(steps):
+        handles = [region(state=s) for s in states]
+        queue.flush(region.model_path, reason="sweep_step")
+        states = [h.result()["state"] for h in handles]
+    return states
 
 
 def qoi_error(ref, approx):

@@ -52,12 +52,20 @@ class InferenceEngine:
         self.path = str(model_path)
         self.use_kernel = use_kernel
         self._applies: dict = {}  # one compiled apply per sharding context
+        # resolved NamedSharding per (shape, mesh, multi_pod): spec_for is
+        # pure python over every dim and was re-run on every eager call
+        self._shardings: dict = {}
         self._load()
 
     def _load(self):
-        self.net, self.params, self.spec = load_model(self.path)
+        # a region's first call can happen inside someone else's jit trace
+        # (predicated lax.cond, infer_async degrading in-trace): params
+        # must be concrete arrays, never constants staged onto that trace
+        with jax.ensure_compile_time_eval():
+            self.net, self.params, self.spec = load_model(self.path)
         self._mtime = _bundle_mtime(self.path)
         self._applies.clear()
+        self._shardings.clear()
 
     @classmethod
     def get(cls, model_path) -> "InferenceEngine":
@@ -71,7 +79,9 @@ class InferenceEngine:
         eng = cls._cache.get(key)
         if eng is None:
             eng = cls._cache[key] = cls(key)
-        elif _bundle_mtime(key) > eng._mtime:
+        elif _bundle_mtime(key) != eng._mtime:
+            # any fingerprint change reloads — including rollbacks to an
+            # older bundle (copy2/mv preserve the original, older mtime)
             eng.reload()
         return eng
 
@@ -91,7 +101,7 @@ class InferenceEngine:
         kinds = [l["kind"] for l in self.spec["layers"]]
         return all(k in ("dense", "act", "flatten") for k in kinds)
 
-    def _build(self):
+    def _build(self, ctx=None):
         net = self.net
         extra = self.spec.get("extra") or {}
         norm = None
@@ -107,9 +117,15 @@ class InferenceEngine:
         if self.use_kernel != "never" and self._is_pure_mlp() and \
                 jax.default_backend() == "tpu":
             from repro.kernels.fused_mlp import ops as fused_ops
+            # under a multi-shard data axis the kernel runs per shard via
+            # shard_map, keeping the VMEM-resident fast path under GSPMD
+            mesh = ctx.mesh if ctx is not None else None
+            data_axes = (ctx.mesh_axes_for("data") if ctx is not None
+                         else ())
 
             def raw(params, x):
-                return fused_ops.fused_mlp_from_spec(self.spec, params, x)
+                return fused_ops.fused_mlp_from_spec(
+                    self.spec, params, x, mesh=mesh, data_axes=data_axes)
         else:
             def raw(params, x):
                 return net.apply(params, x)
@@ -131,21 +147,54 @@ class InferenceEngine:
         key = (ctx.mesh, ctx.multi_pod) if ctx is not None else None
         fn = self._applies.get(key)
         if fn is None:
-            fn = self._applies[key] = self._build()
+            fn = self._applies[key] = self._build(ctx)
         return fn
+
+    def _place(self, x, ctx):
+        """Batch placement over the data axis, with the resolved sharding
+        cached per (shape, mesh): spec resolution ran on *every* eager
+        call before, and device_put is skipped when x already lives there
+        (repeated bucket shapes from the serve batcher)."""
+        if ctx is None or ctx.mesh is None or isinstance(x, jax.core.Tracer):
+            return x
+        key = (x.shape, ctx.mesh, ctx.multi_pod)
+        if key not in self._shardings:
+            self._shardings[key] = ctx.sharding_for(
+                x.shape, ("data",) + (None,) * (x.ndim - 1))
+        sharding = self._shardings[key]
+        if sharding is not None and getattr(x, "sharding", None) != sharding:
+            x = jax.device_put(x, sharding)
+        return x
 
     def __call__(self, x):
         ctx = current_ctx()
         fn = self._apply_for(ctx)
-        if ctx is not None and ctx.mesh is not None and \
-                not isinstance(x, jax.core.Tracer):
-            # place the surrogate batch over the data axis before compute
-            # so per-chip work is batch/n_data_shards
-            sharding = ctx.sharding_for(
-                x.shape, ("data",) + (None,) * (x.ndim - 1))
-            if sharding is not None:
-                x = jax.device_put(x, sharding)
-        return fn(self.params, x)
+        # place the surrogate batch over the data axis before compute
+        # so per-chip work is batch/n_data_shards
+        return fn(self.params, self._place(x, ctx))
+
+    def apply_batched(self, x, *, min_bucket: int = 8):
+        """Serve a coalesced mega-batch: rows padded up to the next
+        power-of-two bucket so the jit cache stays at <= log2(max batch)
+        entries per context, then sliced back to the caller's row count.
+        Under a mesh the bucket floor is raised to the data-shard count
+        (and rounded to a multiple of it), so small batches never lose
+        the data axis to the divisibility fallback.
+
+        Row-wise nets make the padding invisible: output row i depends
+        only on input row i, so callers get bit-identical rows to a
+        same-input synchronous ``__call__`` (tests/test_serve.py).
+        """
+        from repro.serve.batcher import bucket_for
+        ctx = current_ctx()
+        shards = (ctx.axis_size("data")
+                  if ctx is not None and ctx.mesh is not None else 1)
+        n = int(x.shape[0])
+        b = bucket_for(n, min_bucket, shards)
+        if b != n:
+            x = jnp.concatenate(
+                [x, jnp.zeros((b - n,) + x.shape[1:], x.dtype)], axis=0)
+        return self(x)[:n]
 
     def infer_shape(self, in_shape):
         return self.net.out_shape()

@@ -11,13 +11,23 @@ and, per the paper's three ml-modes:
   * ``predicated`` — a runtime boolean picks the path per invocation; both
                      execution paths live in the same traced program
                      (``lax.cond``), the JAX analogue of HPAC's dual
-                     execution paths in one binary.
+                     execution paths in one binary;
+  * ``infer_async``— (serving extension) enqueue the bridged rows on a
+                     ``repro.serve.ServeQueue`` and return an
+                     :class:`AsyncRegionResult`; many callers' requests
+                     coalesce into one mesh-wide batch before inference.
+
+A ``serving=`` queue can also be attached to a ``predicated`` region: the
+eager ML path then defers through the queue (both branches return
+:class:`AsyncRegionResult` so the caller's interface is uniform), while
+traced calls keep the synchronous in-program ``lax.cond``.
 
 Eager calls are host-timed exactly; calls inside a jit trace fall back to
 ordered ``io_callback`` timing/persistence (documented approximation).
 """
 from __future__ import annotations
 
+import functools
 import time
 from typing import Callable, Dict, Optional, Tuple
 
@@ -37,20 +47,54 @@ def _is_traced(*arrays):
                for a in arrays for x in jax.tree.leaves(a))
 
 
+class AsyncRegionResult:
+    """Deferred region invocation handle (``infer_async`` / serving).
+
+    ``result()`` blocks on the serve future (flushing on demand when the
+    queue has no dispatcher thread) and runs the output data bridge in
+    the caller's thread — so bridging cost is paid by whoever consumes
+    the result, not by the dispatcher.
+    """
+
+    __slots__ = ("_region", "_arrays", "_future", "_done")
+
+    def __init__(self, region, arrays, future=None, resolved=None):
+        self._region, self._arrays = region, arrays
+        self._future = future
+        self._done = resolved  # pre-resolved outputs (accurate path)
+
+    def done(self) -> bool:
+        return self._done is not None or self._future.done()
+
+    def deferred(self) -> bool:
+        """True when this invocation actually went through the queue."""
+        return self._future is not None
+
+    def result(self, timeout: Optional[float] = None) -> dict:
+        if self._done is None:
+            Y = self._future.result(timeout)
+            self._done = self._region._bridge_from_jit(Y, self._arrays)
+        return self._done
+
+
 class MLRegion:
     def __init__(self, name: str, fn: Callable, *,
                  inputs: Dict[str, Tuple[TensorFunctor, dict]],
                  outputs: Dict[str, Tuple[TensorFunctor, dict]],
                  mode: str = "predicated",
                  model: Optional[str] = None,
-                 database: Optional[str] = None):
-        assert mode in ("collect", "infer", "predicated")
+                 database: Optional[str] = None,
+                 serving=None):
+        assert mode in ("collect", "infer", "predicated", "infer_async")
         self.name, self.fn, self.mode = name, fn, mode
         self.inputs, self.outputs = inputs, outputs
         self.model_path = model
+        self.serving = serving  # repro.serve.ServeQueue (or None)
+        if mode == "infer_async":
+            assert serving is not None, \
+                f"region {name}: mode='infer_async' needs a serving= queue"
         self.db = (database if isinstance(database, SurrogateDB)
                    else SurrogateDB(database)) if database else None
-        self._engine: Optional[InferenceEngine] = None
 
     # ------------------------------------------------------ data bridge ---
     def bridge_in(self, arrays: dict):
@@ -71,6 +115,18 @@ class MLRegion:
             parts.append(tm.to_tensor())
         return parts[0] if len(parts) == 1 else jnp.concatenate(
             [p.reshape(p.shape[:1] + (-1,)) for p in parts], axis=-1)
+
+    # the bridges are pure gather/scatter/reshape programs over static
+    # functor descriptors, so one jit per region collapses their eager
+    # op-by-op dispatch (which dominated small per-call serving) into a
+    # single compiled call — bit-identical, no float arithmetic involved
+    @functools.cached_property
+    def _bridge_in_jit(self):
+        return jax.jit(self.bridge_in)
+
+    @functools.cached_property
+    def _bridge_from_jit(self):
+        return jax.jit(self.bridge_from)
 
     def bridge_from(self, tensor, arrays: dict):
         """Model output tensor -> app memory (through the out functors).
@@ -104,16 +160,31 @@ class MLRegion:
         # always resolve through the process-wide cache: get() is a dict
         # lookup + bundle-mtime stat, and it is what reloads a bundle the
         # NAS loop retrained under this region's feet
-        self._engine = InferenceEngine.get(self.model_path)
-        return self._engine
+        return InferenceEngine.get(self.model_path)
 
-    def _infer(self, arrays: dict):
-        X = self.bridge_in(arrays)
+    def _rows_in(self, arrays: dict):
+        """Bridge app arrays to engine-shaped f32 rows [n, *in_shape[1:]]."""
+        X = self._bridge_in_jit(arrays)
         eng = self.engine()
         in_shape = tuple(eng.spec["in_shape"])
-        Xb = X.reshape((-1,) + in_shape[1:])
-        Y = eng(Xb.astype(jnp.float32))
-        return self.bridge_from(Y, arrays)
+        return eng, X.reshape((-1,) + in_shape[1:]).astype(jnp.float32)
+
+    def _infer(self, arrays: dict):
+        eng, Xb = self._rows_in(arrays)
+        Y = eng(Xb)
+        return self._bridge_from_jit(Y, arrays)
+
+    def _infer_async(self, arrays: dict) -> AsyncRegionResult:
+        """Enqueue this invocation on the serve queue, keyed (multiplexed)
+        by bundle path; inside a trace there is no host queue to park rows
+        on, so traced calls degrade to synchronous inference."""
+        if _is_traced(arrays):
+            return AsyncRegionResult(self, arrays,
+                                     resolved=self._infer(arrays))
+        eng, Xb = self._rows_in(arrays)
+        del eng  # resolved for bundle load/reload; batcher re-gets per batch
+        fut = self.serving.submit(self.model_path, Xb)
+        return AsyncRegionResult(self, arrays, future=fut)
 
     def _n_sweep(self) -> int:
         functor = next(iter(self.inputs.values()))[0]
@@ -161,9 +232,21 @@ class MLRegion:
             return self._accurate(arrays, collect=True)
         if mode == "infer":
             return self._infer(arrays)
+        if mode == "infer_async":
+            return self._infer_async(arrays)
         # predicated: true -> inference, false -> accurate (+collection)
         assert predicate is not None, "predicated region needs a predicate"
         if not _is_traced(arrays) and not isinstance(predicate, jax.core.Tracer):
+            if self.serving is not None:
+                # serving hook: the ML path defers through the queue; the
+                # accurate path resolves immediately but wears the same
+                # handle so callers need not branch on the predicate
+                if bool(predicate):
+                    return self._infer_async(arrays)
+                return AsyncRegionResult(
+                    self, arrays,
+                    resolved=self._accurate(arrays,
+                                            collect=self.db is not None))
             return (self._infer(arrays) if bool(predicate)
                     else self._accurate(arrays, collect=self.db is not None))
         # traced: both paths in one program

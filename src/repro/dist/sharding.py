@@ -84,6 +84,11 @@ class ShardCtx:
             n *= self.mesh.shape[a]
         return n
 
+    def mesh_axes_for(self, logical: str) -> Tuple[str, ...]:
+        """Physical mesh axes (size > 1) a logical axis maps onto —
+        what shard_map wrappers hand to their in/out specs."""
+        return self._candidates(logical)
+
     def spec_for(self, shape: Sequence[int],
                  logical_axes: Sequence[Optional[str]]) -> P:
         """PartitionSpec for `shape`, one logical name (or None) per dim."""

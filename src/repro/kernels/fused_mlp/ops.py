@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import jax
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels.fused_mlp.fused_mlp import fits_vmem, fused_mlp
 from repro.kernels.fused_mlp.ref import fused_mlp_ref
@@ -15,7 +16,38 @@ def fused_mlp_op(x, weights, biases, acts, *, force_kernel=False):
     return fused_mlp_ref(x, weights, biases, acts)
 
 
-def fused_mlp_from_spec(spec, params, x):
+def fused_mlp_sharded(x, weights, biases, acts, *, mesh, data_axes,
+                      force_kernel=False):
+    """Batch-sharded fused MLP under GSPMD via shard_map.
+
+    Weights replicate (the whole net already fits VMEM per chip — that is
+    the kernel's premise); the batch splits over ``data_axes`` and each
+    shard runs the VMEM-resident kernel on its local rows, so pure-MLP
+    bundles keep the fast path when the engine serves a sharded mesh.
+
+    Falls back to the unsharded op when the batch does not divide the
+    shard count (serve-path buckets are powers of two, so in practice
+    only tiny eager calls fall back).
+    """
+    n_shards = 1
+    for a in data_axes:
+        n_shards *= mesh.shape[a]
+    if n_shards <= 1 or x.shape[0] % n_shards:
+        return fused_mlp_op(x, weights, biases, acts,
+                            force_kernel=force_kernel)
+    from jax.experimental.shard_map import shard_map
+    ax = data_axes[0] if len(data_axes) == 1 else tuple(data_axes)
+    xspec = P(*((ax,) + (None,) * (x.ndim - 1)))
+
+    def local(xs, ws, bs):
+        return fused_mlp_op(xs, ws, bs, acts, force_kernel=force_kernel)
+
+    f = shard_map(local, mesh=mesh, in_specs=(xspec, P(), P()),
+                  out_specs=xspec, check_rep=False)
+    return f(x, list(weights), list(biases))
+
+
+def fused_mlp_from_spec(spec, params, x, *, mesh=None, data_axes=()):
     """Adapter: run a pure-dense Sequential bundle through the kernel.
 
     Layer spec pattern: dense [act] dense [act] ... ; activations between
@@ -39,4 +71,7 @@ def fused_mlp_from_spec(spec, params, x):
             x = x.reshape(x.shape[0], -1)
     if pending_w is not None:
         acts.append("identity")
+    if mesh is not None and data_axes:
+        return fused_mlp_sharded(x, weights, biases, acts, mesh=mesh,
+                                 data_axes=tuple(data_axes))
     return fused_mlp_op(x, weights, biases, acts)

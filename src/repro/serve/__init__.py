@@ -1,0 +1,14 @@
+"""Async batched surrogate serving: queue, coalescing batcher, stats.
+
+The paper's speedups come from replacing accurate regions with surrogate
+inference; at scale the surrogate is a *service*, not a function call.
+This package turns ``MLRegion`` invocations into queued requests that
+coalesce into mesh-wide padded mega-batches (see README.md).
+"""
+from repro.serve.batcher import Batcher, bucket_for, bucket_size
+from repro.serve.queue import (Backpressure, FlushPolicy, ServeFuture,
+                               ServeQueue)
+from repro.serve.stats import ServeStats
+
+__all__ = ["Backpressure", "Batcher", "FlushPolicy", "ServeFuture",
+           "ServeQueue", "ServeStats", "bucket_for", "bucket_size"]

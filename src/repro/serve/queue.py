@@ -1,0 +1,314 @@
+"""ServeQueue: async region serving with mesh-wide coalescing.
+
+Any number of :class:`MLRegion`\\ s submit inference requests (a block of
+bridged rows) keyed by their bundle path; each submit returns a
+:class:`ServeFuture`.  Pending requests coalesce per key and are
+dispatched as one padded mega-batch by the :class:`Batcher` when a flush
+triggers:
+
+  * **max-batch** — a key's pending rows reach ``policy.max_batch_rows``;
+  * **deadline**  — the oldest pending request ages past
+    ``policy.max_delay_s`` (enforced by the dispatcher thread, or by
+    :meth:`poll` for thread-free deterministic drivers);
+  * **explicit**  — :meth:`flush` drains everything now.
+
+Backpressure: total queued rows are capped at
+``policy.max_pending_rows``; ``submit`` blocks until the dispatcher
+drains (or raises :class:`Backpressure` with ``policy.block=False`` /
+on timeout), so a runaway producer cannot grow the queue unboundedly.
+
+Threading model: all queue state lives behind one condition variable.
+Dispatches happen *outside* the lock (in the flusher's thread), so
+producers keep enqueueing for other keys while a mega-batch runs.
+Without :meth:`start`, the queue is synchronous-deterministic: max-batch
+flushes run inline in the submitting thread and ``ServeFuture.result``
+flushes the key on demand — no background thread, bit-reproducible
+driver loops.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+
+from repro.serve.batcher import Batcher
+from repro.serve.stats import ServeStats
+
+
+class Backpressure(RuntimeError):
+    """The queue is full (policy.max_pending_rows) and cannot admit more."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FlushPolicy:
+    """When to coalesce-and-dispatch, and how much may wait."""
+
+    max_batch_rows: int = 1024        # flush a key at this many pending rows
+    max_delay_s: Optional[float] = None   # deadline flush (None: no deadline)
+    min_bucket: int = 8               # smallest padded bucket
+    max_pending_rows: int = 8192      # backpressure across all keys
+    block: bool = True                # submit blocks when full vs raises
+    block_timeout_s: float = 30.0     # blocked submit gives up after this
+
+
+class ServeFuture:
+    """Resolves to the engine-output rows ``[n, ...]`` for one request."""
+
+    __slots__ = ("_event", "_value", "_exc", "_queue", "_key")
+
+    def __init__(self, queue: "ServeQueue", key: str):
+        self._event = threading.Event()
+        self._value = None
+        self._exc: Optional[BaseException] = None
+        self._queue = queue
+        self._key = key
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def set_result(self, value) -> None:
+        self._value = value
+        self._event.set()
+
+    def set_exception(self, exc: BaseException) -> None:
+        self._exc = exc
+        self._event.set()
+
+    def result(self, timeout: Optional[float] = None):
+        if not self._event.is_set():
+            # thread-free queues make progress on demand; threaded queues
+            # will resolve us from the dispatcher, so just wait
+            self._queue._progress(self._key)
+            if not self._event.wait(timeout):
+                raise TimeoutError(
+                    f"serve request for {self._key!r} not resolved within "
+                    f"{timeout}s (queue depth "
+                    f"{self._queue.depth(self._key)} rows)")
+        if self._exc is not None:
+            raise self._exc
+        return self._value
+
+
+class _Request:
+    __slots__ = ("key", "x", "n", "future", "t_enqueue", "ctx")
+
+    def __init__(self, key, x, n, future, t_enqueue, ctx):
+        self.key, self.x, self.n = key, x, n
+        self.future, self.t_enqueue = future, t_enqueue
+        self.ctx = ctx  # submitter's ShardCtx: sharding is thread-local
+
+
+class ServeQueue:
+    def __init__(self, policy: FlushPolicy = FlushPolicy(), *,
+                 batcher: Optional[Batcher] = None):
+        self.policy = policy
+        self._batcher = batcher or Batcher(min_bucket=policy.min_bucket)
+        self._cv = threading.Condition()
+        self._pending: Dict[str, List[_Request]] = {}
+        self._rows_total = 0
+        self._stats: Dict[str, ServeStats] = {}
+        self._thread: Optional[threading.Thread] = None
+        self._stopping = False
+
+    # ------------------------------------------------------------ state ---
+    def stats(self, key: str) -> ServeStats:
+        with self._cv:
+            return self._stat_locked(key)
+
+    def _stat_locked(self, key: str) -> ServeStats:
+        st = self._stats.get(key)
+        if st is None:
+            st = self._stats[key] = ServeStats(key)
+        return st
+
+    def depth(self, key: Optional[str] = None) -> int:
+        """Pending rows for one key (or across all keys)."""
+        with self._cv:
+            if key is None:
+                return self._rows_total
+            return sum(r.n for r in self._pending.get(key, ()))
+
+    def keys(self):
+        with self._cv:
+            return list(self._pending)
+
+    # ----------------------------------------------------------- submit ---
+    def submit(self, key: str, rows) -> ServeFuture:
+        """Queue ``rows`` ([n, ...features], n >= 1) for bundle ``key``."""
+        from repro.dist.sharding import current_ctx
+        x = jnp.asarray(rows)
+        if x.ndim < 1 or x.shape[0] < 1:
+            raise ValueError(f"submit needs [n, ...] rows, got {x.shape}")
+        n = int(x.shape[0])
+        fut = ServeFuture(self, key)
+        req = _Request(key, x, n, fut, time.monotonic(), current_ctx())
+        deadline = time.monotonic() + self.policy.block_timeout_s
+        while True:
+            admitted, drain_inline, flush_inline = False, False, False
+            with self._cv:
+                pend = self._pending.get(key)
+                if pend and pend[0].x.shape[1:] != x.shape[1:]:
+                    raise ValueError(
+                        f"feature-shape mismatch for {key!r}: queued "
+                        f"{pend[0].x.shape[1:]}, submitted {x.shape[1:]}")
+                # backpressure: an oversized request is admitted alone into
+                # an empty queue (flushing as its own batch: no deadlock)
+                if self._admit_locked(n):
+                    admitted = True
+                    self._pending.setdefault(key, []).append(req)
+                    self._rows_total += n
+                    self._stat_locked(key).on_enqueue(n)
+                    if sum(r.n for r in self._pending[key]) >= \
+                            self.policy.max_batch_rows:
+                        if self._thread is not None:
+                            self._cv.notify_all()
+                        else:
+                            flush_inline = True
+                    elif self._thread is not None and \
+                            self.policy.max_delay_s is not None:
+                        self._cv.notify_all()  # recompute thread deadline
+                elif not self.policy.block:
+                    raise Backpressure(
+                        f"{self._rows_total}+{n} rows exceeds "
+                        f"max_pending_rows={self.policy.max_pending_rows}")
+                elif self._thread is not None:
+                    # a dispatcher will drain; wait for it to make space
+                    left = deadline - time.monotonic()
+                    if left <= 0 or not self._cv.wait(timeout=left):
+                        raise Backpressure(
+                            f"submit blocked >{self.policy.block_timeout_s}s "
+                            f"({self._rows_total} rows pending)")
+                else:
+                    # thread-free queue: nobody else can flush, so the
+                    # submitting thread must make space itself
+                    drain_inline = True
+            if admitted:
+                if flush_inline:
+                    self.flush(key, reason="max_batch")
+                return fut
+            if drain_inline:
+                if self.flush(reason="backpressure") == 0 or \
+                        time.monotonic() > deadline:
+                    raise Backpressure(
+                        f"queue full ({self._rows_total} rows) and inline "
+                        f"drain freed nothing")
+
+    def _admit_locked(self, n: int) -> bool:
+        if self._rows_total == 0:
+            return True
+        return self._rows_total + n <= self.policy.max_pending_rows
+
+    # ------------------------------------------------------------ flush ---
+    def flush(self, key: Optional[str] = None, *,
+              reason: str = "explicit") -> int:
+        """Dispatch everything pending for ``key`` (or all keys) now.
+
+        Returns the number of rows dispatched.  Runs in the caller's
+        thread; the queue lock is *not* held during the batched apply,
+        so concurrent submits proceed.
+        """
+        dispatched = 0
+        keys = [key] if key is not None else self.keys()
+        for k in keys:
+            with self._cv:
+                reqs = self._pending.pop(k, [])
+                rows = sum(r.n for r in reqs)
+                self._rows_total -= rows
+                st = self._stat_locked(k)
+                if rows:
+                    self._cv.notify_all()  # wake backpressured submitters
+            if reqs:
+                self._batcher.dispatch(k, reqs, st, reason)
+                dispatched += rows
+        return dispatched
+
+    def poll(self) -> int:
+        """Flush keys whose max-batch/deadline triggers fired (no thread).
+
+        Driver loops that own their own cadence call this instead of
+        running a dispatcher thread: same flush decisions, caller's
+        thread, deterministic timing.
+        """
+        dispatched = 0
+        for k, why in self._due():
+            dispatched += self.flush(k, reason=why)
+        return dispatched
+
+    def _due(self):
+        with self._cv:
+            return self._due_locked()
+
+    def _progress(self, key: str) -> None:
+        """Called by a waiting future: flush on demand unless a dispatcher
+        thread with a deadline policy is guaranteed to resolve us."""
+        if self._thread is None or self.policy.max_delay_s is None:
+            self.flush(key, reason="demand")
+
+    # ------------------------------------------------------- dispatcher ---
+    def start(self) -> "ServeQueue":
+        """Run a daemon dispatcher thread enforcing size + deadline flushes."""
+        with self._cv:
+            if self._thread is not None:
+                return self
+            self._stopping = False
+            self._thread = threading.Thread(target=self._run, daemon=True,
+                                            name="repro-serve-dispatch")
+        self._thread.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        with self._cv:
+            t = self._thread
+            self._stopping = True
+            self._cv.notify_all()
+        if t is not None:
+            t.join()
+        with self._cv:
+            self._thread = None
+        if drain:
+            self.flush(reason="drain")
+
+    def _run(self) -> None:
+        while True:
+            with self._cv:
+                if self._stopping:
+                    return
+                due = self._due_locked()
+                if not due:
+                    self._cv.wait(timeout=self._nearest_deadline())
+                    continue
+            for k, why in due:
+                self.flush(k, reason=why)
+
+    def _due_locked(self):
+        now = time.monotonic()
+        due = []
+        for k, reqs in self._pending.items():
+            if not reqs:
+                continue
+            if sum(r.n for r in reqs) >= self.policy.max_batch_rows:
+                due.append((k, "max_batch"))
+            elif self.policy.max_delay_s is not None and \
+                    now - reqs[0].t_enqueue >= self.policy.max_delay_s:
+                due.append((k, "deadline"))
+        return due
+
+    def _nearest_deadline(self) -> Optional[float]:
+        if self.policy.max_delay_s is None:
+            return None
+        now = time.monotonic()
+        waits = [self.policy.max_delay_s - (now - reqs[0].t_enqueue)
+                 for reqs in self._pending.values() if reqs]
+        if not waits:
+            return None
+        return max(1e-4, min(waits))
+
+    # -------------------------------------------------- context manager ---
+    def __enter__(self) -> "ServeQueue":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop(drain=True)

@@ -1,0 +1,130 @@
+"""Per-region serving statistics.
+
+One :class:`ServeStats` per bundle path (the multiplexing key of the
+serve queue).  Counters answer the capacity questions the paper's
+Observation 2 raises — is the hardware actually fed? — for a *service*
+rather than a single call:
+
+  * queue depth (rows waiting right now),
+  * batch occupancy (real rows / bucket rows — how much of each
+    dispatched mega-batch was useful work vs padding),
+  * request latency percentiles (enqueue -> future resolved),
+  * achieved rows/s over dispatch busy time.
+
+All mutation goes through the queue/batcher under this object's own
+lock, so stats stay consistent when a dispatcher thread and caller
+threads flush concurrently.
+"""
+from __future__ import annotations
+
+import threading
+from collections import Counter, deque
+from typing import Deque, Dict
+
+
+def _percentile(sorted_vals, q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    idx = q * (len(sorted_vals) - 1)
+    lo = int(idx)
+    hi = min(lo + 1, len(sorted_vals) - 1)
+    frac = idx - lo
+    return sorted_vals[lo] * (1 - frac) + sorted_vals[hi] * frac
+
+
+class ServeStats:
+    """Counters for one serving key; thread-safe; cheap to snapshot."""
+
+    def __init__(self, key: str, latency_window: int = 2048):
+        self.key = key
+        self._lock = threading.Lock()
+        self.requests_enqueued = 0
+        self.rows_enqueued = 0
+        self.requests_completed = 0
+        self.rows_completed = 0
+        self.batches = 0
+        self.batches_failed = 0
+        self.requests_failed = 0
+        self.rows_failed = 0
+        self.bucket_rows = 0      # sum of dispatched (padded) batch sizes
+        self.padded_rows = 0
+        self.queue_depth_rows = 0
+        self.queue_depth_requests = 0
+        self.flush_reasons: Counter = Counter()
+        self.busy_s = 0.0         # wall time spent inside dispatches
+        self._lat: Deque[float] = deque(maxlen=latency_window)
+
+    # ------------------------------------------------------------ hooks ---
+    def on_enqueue(self, rows: int) -> None:
+        with self._lock:
+            self.requests_enqueued += 1
+            self.rows_enqueued += rows
+            self.queue_depth_rows += rows
+            self.queue_depth_requests += 1
+
+    def on_failure(self, *, requests: int, rows: int, reason: str,
+                   busy_s: float) -> None:
+        """A dispatch failed: its requests left the queue unserved.
+
+        Kept apart from the completed counters so rows/s and occupancy
+        reflect only work the mesh actually served — a key failing every
+        batch must look broken on a dashboard, not healthy.
+        """
+        with self._lock:
+            self.batches_failed += 1
+            self.requests_failed += requests
+            self.rows_failed += rows
+            self.queue_depth_rows -= rows
+            self.queue_depth_requests -= requests
+            self.flush_reasons[reason] += 1
+            self.busy_s += busy_s
+
+    def on_batch(self, *, requests: int, rows: int, bucket: int,
+                 reason: str, busy_s: float, latencies_s) -> None:
+        with self._lock:
+            self.batches += 1
+            self.requests_completed += requests
+            self.rows_completed += rows
+            self.bucket_rows += bucket
+            self.padded_rows += bucket - rows
+            self.queue_depth_rows -= rows
+            self.queue_depth_requests -= requests
+            self.flush_reasons[reason] += 1
+            self.busy_s += busy_s
+            self._lat.extend(latencies_s)
+
+    # --------------------------------------------------------- snapshot ---
+    def snapshot(self) -> Dict:
+        with self._lock:
+            lat = sorted(self._lat)
+            occ = (self.rows_completed / self.bucket_rows
+                   if self.bucket_rows else 0.0)
+            rows_per_s = (self.rows_completed / self.busy_s
+                          if self.busy_s > 0 else 0.0)
+            return {
+                "key": self.key,
+                "requests_enqueued": self.requests_enqueued,
+                "rows_enqueued": self.rows_enqueued,
+                "requests_completed": self.requests_completed,
+                "rows_completed": self.rows_completed,
+                "batches": self.batches,
+                "batches_failed": self.batches_failed,
+                "requests_failed": self.requests_failed,
+                "rows_failed": self.rows_failed,
+                "bucket_rows": self.bucket_rows,
+                "padded_rows": self.padded_rows,
+                "queue_depth_rows": self.queue_depth_rows,
+                "queue_depth_requests": self.queue_depth_requests,
+                "batch_occupancy": occ,
+                "flush_reasons": dict(self.flush_reasons),
+                "latency_p50_ms": _percentile(lat, 0.50) * 1e3,
+                "latency_p99_ms": _percentile(lat, 0.99) * 1e3,
+                "rows_per_s": rows_per_s,
+            }
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        s = self.snapshot()
+        return (f"ServeStats({self.key!r}, depth={s['queue_depth_rows']}, "
+                f"batches={s['batches']}, occ={s['batch_occupancy']:.2f}, "
+                f"p50={s['latency_p50_ms']:.2f}ms, "
+                f"rows/s={s['rows_per_s']:.0f})")

@@ -1,5 +1,11 @@
 """Production train step: fwd + bwd + clip + AdamW (+ optional microbatch
-grad accumulation and int8 gradient compression across the pod axis)."""
+grad accumulation and int8 gradient compression across the pod axis).
+
+Checkpointing entry points (`save_train_state` / `restore_train_state`)
+connect `ckpt.CheckpointManager` to the dist substrate: restore derives
+per-leaf NamedShardings from ``dist.sharding.param_spec_tree`` for the
+*current* mesh, so a job resumed on a different topology than the writer
+lays its state out elastically (the reshard path tested in ckpt)."""
 from __future__ import annotations
 
 import functools
@@ -17,6 +23,48 @@ def make_train_state(rng, cfg):
     params = lm.init_params(rng, cfg)
     opt = init_opt_state(params, cfg.opt_policy)
     return {"params": params, "opt": opt}
+
+
+def state_shardings(cfg, state_like, mesh=None, multi_pod: bool = False):
+    """NamedSharding pytree for a train state on the active (or given) mesh.
+
+    Name-driven: optimizer m/v/master mirrors reuse the param rules, the
+    step counter and norm scales replicate.  Returns None when no mesh is
+    available (eager CPU runs restore unsharded).
+    """
+    from jax.sharding import NamedSharding
+    from repro.dist.sharding import current_ctx, param_spec_tree
+    if mesh is None:
+        ctx = current_ctx()
+        if ctx is None or ctx.mesh is None:
+            return None
+        mesh, multi_pod = ctx.mesh, ctx.multi_pod
+    specs = param_spec_tree(state_like, cfg, mesh, multi_pod)
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs,
+                        is_leaf=lambda x: isinstance(
+                            x, jax.sharding.PartitionSpec))
+
+
+def save_train_state(mgr, step: int, state) -> None:
+    """Checkpoint a (possibly sharded) train state.
+
+    The manager gathers every leaf to a global host array, so the written
+    checkpoint is topology-free — any later mesh can restore it.
+    """
+    mgr.save(step, state)
+
+
+def restore_train_state(mgr, cfg, state_like, step: Optional[int] = None,
+                        mesh=None, multi_pod: bool = False):
+    """Restore a train state, elastically laid out for the current mesh.
+
+    ``state_like`` gives the tree structure/dtypes (e.g. a fresh
+    ``make_train_state`` or its ``jax.eval_shape``); shardings come from
+    ``param_spec_tree`` against the active ``use_mesh`` context unless a
+    mesh is passed explicitly.  Returns ``(state, step)``.
+    """
+    shardings = state_shardings(cfg, state_like, mesh, multi_pod)
+    return mgr.restore(state_like, step, shardings=shardings)
 
 
 def compute_grads(cfg, params, batch, *, microbatches: int = 1):
