@@ -19,6 +19,7 @@ def main() -> None:
     from benchmarks.kernel_bench import kernel_bench
     from benchmarks.roofline import roofline_rows
     from benchmarks.serve_bench import serving_throughput
+    from benchmarks.tune_bench import tune_rows
 
     benches = {
         "loc_table": tables.loc_table,                 # paper Table II
@@ -30,6 +31,7 @@ def main() -> None:
         "kernel_bench": kernel_bench,                  # Pallas kernels
         "roofline": roofline_rows,                     # §Roofline (dry-run)
         "serve_throughput": serving_throughput,        # repro.serve coalescing
+        "tune": tune_rows,                             # repro.tune autotuning
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

@@ -78,11 +78,18 @@ def serving_throughput(fast=False, *, n_callers=None, rows_per_call=8):
     chunks = [opts[i:i + rows_per_call] for i in range(0, total,
                                                       rows_per_call)]
 
+    from repro.tune import AdaptiveFlushController
     queue = ServeQueue(FlushPolicy(max_batch_rows=total,
                                    max_pending_rows=4 * total))
+    ad_policy = FlushPolicy(max_batch_rows=total, max_pending_rows=4 * total,
+                            max_delay_s=0.05)
+    ad_queue = ServeQueue(ad_policy,
+                          controller=AdaptiveFlushController(ad_policy))
     r_sync = binomial.make_region(rows_per_call, mode="infer", model=mp)
     r_async = binomial.make_region(rows_per_call, mode="infer_async",
                                    model=mp, serving=queue)
+    r_adapt = binomial.make_region(rows_per_call, mode="infer_async",
+                                   model=mp, serving=ad_queue)
 
     with use_mesh(mesh):
         def per_call():
@@ -97,16 +104,29 @@ def serving_throughput(fast=False, *, n_callers=None, rows_per_call=8):
             jax.block_until_ready(outs)
             return outs
 
+        def adaptive():
+            # no explicit flush: the controller's deadline/batch trigger
+            # decides when the mega-batches go out
+            handles = [r_adapt(opts=c) for c in chunks]
+            outs = [h.result(30)["out"] for h in handles]
+            jax.block_until_ready(outs)
+            return outs
+
         t_call = _measure(per_call)
         t_coal = _measure(coalesced)
+        with ad_queue:  # dispatcher thread enforces the adaptive deadline
+            t_adapt = _measure(adaptive)
         # exactness: coalesced rows must match per-call rows bit-for-bit
         same = all(
             bool((np.asarray(a) == np.asarray(b)).all())
             for a, b in zip(per_call(), coalesced()))
 
     st = queue.stats(mp).snapshot()
+    ast = ad_queue.stats(mp).snapshot()
+    pool = ad_queue._batcher.scratch.stats()
     rows_s_call = total / t_call
     rows_s_coal = total / t_coal
+    rows_s_adapt = total / t_adapt
     speedup = rows_s_coal / rows_s_call
     derived = (f"devices={ndev};callers={n_callers};"
                f"rows_per_call={rows_per_call};"
@@ -115,7 +135,11 @@ def serving_throughput(fast=False, *, n_callers=None, rows_per_call=8):
                f"speedup_x={speedup:.2f};bitwise_equal={same};"
                f"occupancy={st['batch_occupancy']:.2f};"
                f"p50_ms={st['latency_p50_ms']:.2f};"
-               f"p99_ms={st['latency_p99_ms']:.2f}")
+               f"p99_ms={st['latency_p99_ms']:.2f};"
+               f"adaptive_rows_s={rows_s_adapt:.0f};"
+               f"adaptive_p50_ms={ast['latency_p50_ms']:.2f};"
+               f"adaptive_p99_ms={ast['latency_p99_ms']:.2f};"
+               f"scratch_hit_rate={pool['hits'] / max(1, pool['hits'] + pool['misses']):.2f}")
     return [("serve_throughput/binomial", t_coal / n_callers * 1e6, derived)]
 
 

@@ -1,0 +1,239 @@
+"""Autotuning benchmark: tuned-vs-default kernel tiles, adaptive-vs-static
+flush policies.
+
+Two measurements, two gates (``--check``, the CI autotune smoke):
+
+  1. **Kernel**: sweep ``fused_mlp`` batch tiles for NAS-representative
+     surrogate shapes (via ``repro.tune.sweep_fused_mlp``, persisted in
+     ``artifacts/tune/``).  Gate: the tuned tile must be >= 1.0x the
+     hardcoded default (structural: the default is always swept, the
+     winner is the measured argmin) with bit-identical outputs.
+  2. **Serving**: drive a surrogate region queue under a fast burst
+     (throughput regime) and a slow trickle (latency regime) for each
+     static deadline and for the adaptive controller.  Gate: adaptive
+     achieves >= ``CHECK_RATIO`` x the best static deadline's burst
+     rows/s AND a trickle p99 no worse than that same best-throughput
+     static's — the adaptive policy must win the latency regime without
+     giving up the throughput regime.
+
+``--markdown`` renders both result sets as tables (the EXPERIMENTS.md
+"Autotune" section is regenerated from this).
+
+  PYTHONPATH=src python -m benchmarks.tune_bench --check [--fast]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+CHECK_RATIO = 0.9        # adaptive rows/s vs best static
+STATIC_DEADLINES_S = (0.005, 0.02, 0.05)
+BURST_REQUESTS, TRICKLE_REQUESTS = 48, 24
+ROWS_PER_REQUEST = 8
+TRICKLE_GAP_S = 0.005
+
+# NAS-representative pure-MLP surrogate shapes: (widths, serve bucket)
+KERNEL_SHAPES = (
+    ((5, 128, 128, 1), 256),    # binomial/bonds-like scalar regressor
+    ((16, 256, 256, 4), 512),   # wider multi-output head
+)
+
+
+# ------------------------------------------------------------- kernel ------
+def kernel_rows(fast=False, force=False):
+    from repro.tune import sweep_fused_mlp
+    shapes = KERNEL_SHAPES[:1] if fast else KERNEL_SHAPES
+    rows = []
+    for widths, bucket in shapes:
+        rec = sweep_fused_mlp(list(widths), bucket, force=force,
+                              reps=3 if fast else 5)
+        name = "tune/fused_mlp_" + "-".join(map(str, widths)) + f"_b{bucket}"
+        derived = (f"tile={rec['batch_tile']};default_tile=128;"
+                   f"tuned_us={rec['us']};default_us={rec['default_us']};"
+                   f"speedup_x={rec['speedup_x']};exact={rec['exact']};"
+                   f"backend={rec['backend']}")
+        rows.append((name, rec["us"] or 0.0, derived))
+    return rows
+
+
+# ------------------------------------------------------------ serving ------
+def _bundle(path):
+    from repro.nn import MLP
+    from repro.nn.serialize import save_model
+    net = MLP((1, 5), [128, 128], 1)
+    params = net.init(jax.random.PRNGKey(0))
+    return save_model(path, net, params)
+
+
+def _prewarm(mp):
+    """Compile every bucket shape (donated + caller-owned applies) the
+    scenarios can dispatch, so the timed runs compare flush policies —
+    not which config happened to hit a fresh jit shape first."""
+    import jax.numpy as jnp
+
+    from repro.core.engine import InferenceEngine
+    eng = InferenceEngine.get(mp)
+    b = 8
+    while b <= 1024:
+        eng.apply_batched(jnp.zeros((b, 5), np.float32))
+        eng.apply_batched(jnp.zeros((b, 5), np.float32), donate=True,
+                          prepadded=True)
+        b *= 2
+
+
+def _drive(mp, make_queue, n_requests, gap_s, seed=0):
+    """Run one serving scenario; returns (wall_s, stats snapshot)."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    blocks = [jnp.asarray(rng.normal(size=(ROWS_PER_REQUEST, 5))
+                          .astype(np.float32)) for _ in range(n_requests)]
+    q = make_queue()
+    with q:
+        t0 = time.perf_counter()
+        futs = []
+        for b in blocks:
+            futs.append(q.submit(mp, b))
+            if gap_s:
+                time.sleep(gap_s)
+        for f in futs:
+            f.result(30)
+        wall = time.perf_counter() - t0
+    return wall, q.stats(mp).snapshot()
+
+
+def _scenarios(mp, make_queue, fast=False):
+    """(burst rows/s, trickle p50/p99 ms) for one queue configuration."""
+    n_burst = BURST_REQUESTS // (2 if fast else 1)
+    n_trickle = TRICKLE_REQUESTS // (2 if fast else 1)
+    # warmup: compile every bucket shape this config will serve, so the
+    # timed runs compare policies, not jit cache luck
+    _drive(mp, make_queue, n_burst, 0.0, seed=99)
+    wall, _ = _drive(mp, make_queue, n_burst, 0.0)
+    burst_rows_s = n_burst * ROWS_PER_REQUEST / wall
+    _, st = _drive(mp, make_queue, n_trickle, TRICKLE_GAP_S)
+    return {"burst_rows_s": burst_rows_s,
+            "trickle_p50_ms": st["latency_p50_ms"],
+            "trickle_p99_ms": st["latency_p99_ms"]}
+
+
+def serving_rows(fast=False):
+    """Adaptive controller vs each static deadline, both regimes."""
+    import pathlib
+    import tempfile
+
+    from repro.serve import FlushPolicy, ServeQueue
+    from repro.tune import AdaptiveFlushController
+
+    tmp = pathlib.Path(tempfile.mkdtemp(prefix="tune_bench_"))
+    mp = _bundle(tmp / "surrogate")
+    _prewarm(mp)
+    results = {}
+    for d in STATIC_DEADLINES_S:
+        pol = FlushPolicy(max_batch_rows=4096, max_pending_rows=1 << 16,
+                          max_delay_s=d)
+        results[f"static_{d * 1e3:g}ms"] = _scenarios(
+            mp, lambda p=pol: ServeQueue(p), fast=fast)
+    pol = FlushPolicy(max_batch_rows=4096, max_pending_rows=1 << 16,
+                      max_delay_s=max(STATIC_DEADLINES_S))
+    ctrl_pol = pol
+
+    def adaptive_queue():
+        return ServeQueue(ctrl_pol, controller=AdaptiveFlushController(
+            ctrl_pol, warmup_requests=4))
+
+    results["adaptive"] = _scenarios(mp, adaptive_queue, fast=fast)
+
+    rows = []
+    for name, r in results.items():
+        derived = (f"burst_rows_s={r['burst_rows_s']:.0f};"
+                   f"trickle_p50_ms={r['trickle_p50_ms']:.2f};"
+                   f"trickle_p99_ms={r['trickle_p99_ms']:.2f}")
+        rows.append((f"tune/serve_{name}", 0.0, derived))
+    return rows, results
+
+
+def tune_rows(fast=False):
+    """benchmarks.run entry: kernel + serving CSV rows."""
+    rows = kernel_rows(fast=fast)
+    srows, _ = serving_rows(fast=fast)
+    return rows + srows
+
+
+# ------------------------------------------------------------- output ------
+def _markdown(krows, results):
+    out = ["### Autotuned fused_mlp tiles", "",
+           "| widths | bucket | tuned tile | tuned us | default(128) us | "
+           "speedup | exact |",
+           "|---|---|---|---|---|---|---|"]
+    for name, _, derived in krows:
+        kv = dict(item.split("=") for item in derived.split(";"))
+        shape = name.split("fused_mlp_")[1]
+        widths, bucket = shape.rsplit("_b", 1)
+        out.append(f"| {widths} | {bucket} | {kv['tile']} | "
+                   f"{kv['tuned_us']} | {kv['default_us']} | "
+                   f"{kv['speedup_x']}x | {kv['exact']} |")
+    out += ["", "### Adaptive vs static flush policies", "",
+            "| policy | burst rows/s | trickle p50 ms | trickle p99 ms |",
+            "|---|---|---|---|"]
+    for name, r in results.items():
+        out.append(f"| {name} | {r['burst_rows_s']:.0f} | "
+                   f"{r['trickle_p50_ms']:.2f} | {r['trickle_p99_ms']:.2f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="fail unless tuned >= 1.0x default and adaptive "
+                         f">= {CHECK_RATIO}x best-static rows/s with no "
+                         "worse trickle p99")
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--force", action="store_true",
+                    help="re-sweep even if the tune cache has entries")
+    ap.add_argument("--markdown", action="store_true",
+                    help="print markdown tables (for EXPERIMENTS.md)")
+    args = ap.parse_args()
+
+    krows = kernel_rows(fast=args.fast, force=args.force)
+    srows, results = serving_rows(fast=args.fast)
+    if args.markdown:
+        print(_markdown(krows, results))
+    else:
+        print("name,us_per_call,derived")
+        for n, us, derived in krows + srows:
+            print(f"{n},{us:.2f},{derived}", flush=True)
+
+    if args.check:
+        failures = []
+        for name, _, derived in krows:
+            kv = dict(item.split("=") for item in derived.split(";"))
+            if kv["exact"] != "True":
+                failures.append(f"{name}: tuned tile not bit-identical")
+            if float(kv["speedup_x"]) < 1.0:
+                failures.append(f"{name}: tuned {kv['speedup_x']}x < 1.0x "
+                                "default")
+        statics = {k: v for k, v in results.items() if k != "adaptive"}
+        best_name = max(statics, key=lambda k: statics[k]["burst_rows_s"])
+        best = statics[best_name]
+        ad = results["adaptive"]
+        if ad["burst_rows_s"] < CHECK_RATIO * best["burst_rows_s"]:
+            failures.append(
+                f"adaptive burst {ad['burst_rows_s']:.0f} rows/s < "
+                f"{CHECK_RATIO}x best static {best_name} "
+                f"({best['burst_rows_s']:.0f})")
+        if ad["trickle_p99_ms"] > best["trickle_p99_ms"]:
+            failures.append(
+                f"adaptive trickle p99 {ad['trickle_p99_ms']:.2f}ms worse "
+                f"than best-throughput static {best_name} "
+                f"({best['trickle_p99_ms']:.2f}ms)")
+        if failures:
+            raise SystemExit("tune smoke FAILED:\n  " + "\n  ".join(failures))
+        print(f"[tune smoke] OK: kernels tuned, adaptive "
+              f"{ad['burst_rows_s']:.0f} rows/s vs best static "
+              f"{best['burst_rows_s']:.0f} ({best_name}), trickle p99 "
+              f"{ad['trickle_p99_ms']:.2f}ms vs {best['trickle_p99_ms']:.2f}ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -41,10 +41,29 @@ def _kernel(*refs, n_layers, acts):
     o_ref[...] = h.astype(o_ref.dtype)
 
 
-def fits_vmem(widths, batch_tile=128, budget=12 * 2 ** 20):
-    wbytes = sum(a * b * 4 for a, b in zip(widths[:-1], widths[1:]))
-    abytes = 2 * batch_tile * max(widths) * 4
-    return wbytes + abytes < budget
+def _round_up(n: int, m: int) -> int:
+    return n + (-n % m)
+
+
+def fits_vmem(widths, batch_tile=128, budget=12 * 2 ** 20, dtype_bytes=4):
+    """Exact VMEM accounting for one grid step of the fused kernel.
+
+    VMEM tiles are padded to the TPU register layout — (8, 128) sublane x
+    lane for f32 — so a [129, 5] weight occupies 136 x 128 lanes, not
+    129 x 5.  Bias rows cost a full (8, 128)-padded tile each, and the
+    batch tile rounds up to a sublane multiple.  The tuner trusts this
+    predicate to reject configs that would overflow, so it must account
+    every resident byte: weights + biases + input/output activation
+    tiles (double-buffered pipeline: 2x each).
+    """
+    sublane = max(8 * 4 // dtype_bytes, 8)  # f32: 8, bf16: 16
+    wbytes = sum(_round_up(a, sublane) * _round_up(b, 128) * dtype_bytes
+                 for a, b in zip(widths[:-1], widths[1:]))
+    bbytes = sum(sublane * _round_up(b, 128) * dtype_bytes
+                 for b in widths[1:])
+    tile_rows = _round_up(batch_tile, sublane)
+    abytes = 2 * 2 * tile_rows * _round_up(max(widths), 128) * dtype_bytes
+    return wbytes + bbytes + abytes <= budget
 
 
 def fused_mlp(x, weights, biases, acts, *, batch_tile: int = 128,

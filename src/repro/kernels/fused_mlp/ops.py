@@ -8,16 +8,37 @@ from repro.kernels.fused_mlp.fused_mlp import fits_vmem, fused_mlp
 from repro.kernels.fused_mlp.ref import fused_mlp_ref
 
 
-def fused_mlp_op(x, weights, biases, acts, *, force_kernel=False):
+def _tile_for(widths, x, batch_tile):
+    """Resolve the batch tile: explicit arg > tuned cache > default 128.
+
+    The cache lookup happens at trace time (x.shape is static inside the
+    engine's jit), so serving pays one dict probe per compiled shape,
+    not per call.  Tuned tiles are re-checked against ``fits_vmem`` —
+    a cache written on a machine with a bigger VMEM budget must not
+    push this one over.
+    """
+    if batch_tile is None:
+        from repro.tune.cache import best_tile
+        batch_tile = best_tile(widths, x.dtype, jax.default_backend(),
+                               int(x.shape[0]))
+    if batch_tile is None or not fits_vmem(widths, batch_tile):
+        batch_tile = 128
+    return batch_tile
+
+
+def fused_mlp_op(x, weights, biases, acts, *, force_kernel=False,
+                 batch_tile=None):
     widths = [weights[0].shape[0]] + [w.shape[1] for w in weights]
     on_tpu = jax.default_backend() == "tpu"
     if (force_kernel or on_tpu) and fits_vmem(widths):
-        return fused_mlp(x, weights, biases, acts, interpret=not on_tpu)
+        tile = _tile_for(widths, x, batch_tile)
+        return fused_mlp(x, weights, biases, acts, batch_tile=tile,
+                         interpret=not on_tpu)
     return fused_mlp_ref(x, weights, biases, acts)
 
 
 def fused_mlp_sharded(x, weights, biases, acts, *, mesh, data_axes,
-                      force_kernel=False):
+                      force_kernel=False, batch_tile=None):
     """Batch-sharded fused MLP under GSPMD via shard_map.
 
     Weights replicate (the whole net already fits VMEM per chip — that is
@@ -34,13 +55,17 @@ def fused_mlp_sharded(x, weights, biases, acts, *, mesh, data_axes,
         n_shards *= mesh.shape[a]
     if n_shards <= 1 or x.shape[0] % n_shards:
         return fused_mlp_op(x, weights, biases, acts,
-                            force_kernel=force_kernel)
+                            force_kernel=force_kernel,
+                            batch_tile=batch_tile)
     from jax.experimental.shard_map import shard_map
     ax = data_axes[0] if len(data_axes) == 1 else tuple(data_axes)
     xspec = P(*((ax,) + (None,) * (x.ndim - 1)))
 
     def local(xs, ws, bs):
-        return fused_mlp_op(xs, ws, bs, acts, force_kernel=force_kernel)
+        # xs carries the *per-shard* batch here, so the tuned-tile
+        # lookup keys on the rows each chip actually serves
+        return fused_mlp_op(xs, ws, bs, acts, force_kernel=force_kernel,
+                            batch_tile=batch_tile)
 
     f = shard_map(local, mesh=mesh, in_specs=(xspec, P(), P()),
                   out_specs=xspec, check_rep=False)

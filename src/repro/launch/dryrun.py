@@ -219,6 +219,23 @@ def run_smoke(outdir: pathlib.Path, force: bool = False) -> dict:
     return rec
 
 
+def run_tune(bundle=None, buckets=(64, 256, 1024), force=False):
+    """Pre-populate the fused_mlp autotune cache (artifacts/tune).
+
+    The serve path consults the cache at trace time
+    (``fused_mlp_op`` -> ``repro.tune.cache.best_tile``); running this
+    at deploy — per surrogate bundle, or over the NAS-representative
+    default shapes — means the first real mega-batch already runs the
+    measured-best batch tile instead of the hardcoded default.
+    """
+    from repro.tune import autotune
+    targets = [bundle] if bundle else [[5, 128, 128, 1], [16, 256, 256, 4]]
+    for t in targets:
+        recs = autotune(t, list(buckets), force=force, verbose=True)
+        wins = sum(1 for r in recs if r["exact"])
+        print(f"[tune] {t}: {wins}/{len(recs)} buckets tuned", flush=True)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
@@ -227,9 +244,23 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--tune", action="store_true",
+                    help="pre-populate the kernel autotune cache for the "
+                         "serve-path shapes (see repro.tune)")
+    ap.add_argument("--tune-bundle", default=None,
+                    help="--tune: autotune this bundle's widths instead of "
+                         "the NAS-representative defaults")
+    ap.add_argument("--tune-buckets", default="64,256,1024",
+                    help="--tune: comma-separated batch buckets to sweep")
     ap.add_argument("--out", default=str(ARTIFACTS))
     args = ap.parse_args()
     outdir = pathlib.Path(args.out)
+
+    if args.tune:
+        run_tune(args.tune_bundle,
+                 [int(b) for b in args.tune_buckets.split(",")],
+                 force=args.force)
+        return
 
     if args.smoke:
         run_smoke(outdir, force=args.force)

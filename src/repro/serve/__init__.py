@@ -8,7 +8,9 @@ coalesce into mesh-wide padded mega-batches (see README.md).
 from repro.serve.batcher import Batcher, bucket_for, bucket_size
 from repro.serve.queue import (Backpressure, FlushPolicy, ServeFuture,
                                ServeQueue)
+from repro.serve.scratch import ScratchPool
 from repro.serve.stats import ServeStats
 
-__all__ = ["Backpressure", "Batcher", "FlushPolicy", "ServeFuture",
-           "ServeQueue", "ServeStats", "bucket_for", "bucket_size"]
+__all__ = ["Backpressure", "Batcher", "FlushPolicy", "ScratchPool",
+           "ServeFuture", "ServeQueue", "ServeStats", "bucket_for",
+           "bucket_size"]

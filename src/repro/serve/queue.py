@@ -103,8 +103,9 @@ class _Request:
 
 class ServeQueue:
     def __init__(self, policy: FlushPolicy = FlushPolicy(), *,
-                 batcher: Optional[Batcher] = None):
+                 batcher: Optional[Batcher] = None, controller=None):
         self.policy = policy
+        self.controller = controller  # e.g. tune.AdaptiveFlushController
         self._batcher = batcher or Batcher(min_bucket=policy.min_bucket)
         self._cv = threading.Condition()
         self._pending: Dict[str, List[_Request]] = {}
@@ -112,6 +113,33 @@ class ServeQueue:
         self._stats: Dict[str, ServeStats] = {}
         self._thread: Optional[threading.Thread] = None
         self._stopping = False
+
+    # ------------------------------------------------- adaptive policy ---
+    # An attached controller overrides the static deadline and max-batch
+    # trigger per key from observed arrival rates + predicted batch
+    # latency; any controller failure degrades to the static policy, so
+    # an adaptive queue can never serve *worse* than its FlushPolicy.
+    def _delay_for(self, key: str) -> Optional[float]:
+        if self.controller is not None:
+            try:
+                return self.controller.delay_for(key, self._stats.get(key))
+            except Exception:
+                return self.policy.max_delay_s
+        return self.policy.max_delay_s
+
+    def _batch_rows_for(self, key: str) -> int:
+        if self.controller is not None:
+            try:
+                return max(1, int(self.controller.batch_rows_for(
+                    key, self._stats.get(key))))
+            except Exception:
+                return self.policy.max_batch_rows
+        return self.policy.max_batch_rows
+
+    def _may_deadline(self) -> bool:
+        """Could *any* key ever get a deadline flush from the thread?"""
+        return self.policy.max_delay_s is not None or \
+            self.controller is not None
 
     # ------------------------------------------------------------ state ---
     def stats(self, key: str) -> ServeStats:
@@ -162,13 +190,12 @@ class ServeQueue:
                     self._rows_total += n
                     self._stat_locked(key).on_enqueue(n)
                     if sum(r.n for r in self._pending[key]) >= \
-                            self.policy.max_batch_rows:
+                            self._batch_rows_for(key):
                         if self._thread is not None:
                             self._cv.notify_all()
                         else:
                             flush_inline = True
-                    elif self._thread is not None and \
-                            self.policy.max_delay_s is not None:
+                    elif self._thread is not None and self._may_deadline():
                         self._cv.notify_all()  # recompute thread deadline
                 elif not self.policy.block:
                     raise Backpressure(
@@ -243,8 +270,11 @@ class ServeQueue:
 
     def _progress(self, key: str) -> None:
         """Called by a waiting future: flush on demand unless a dispatcher
-        thread with a deadline policy is guaranteed to resolve us."""
-        if self._thread is None or self.policy.max_delay_s is None:
+        thread with a deadline for this key is guaranteed to resolve us.
+        (A cold controller over a deadline-free static policy returns
+        None — the future must make its own progress, same as no
+        controller at all.)"""
+        if self._thread is None or self._delay_for(key) is None:
             self.flush(key, reason="demand")
 
     # ------------------------------------------------------- dispatcher ---
@@ -289,19 +319,25 @@ class ServeQueue:
         for k, reqs in self._pending.items():
             if not reqs:
                 continue
-            if sum(r.n for r in reqs) >= self.policy.max_batch_rows:
+            delay = self._delay_for(k)
+            if sum(r.n for r in reqs) >= self._batch_rows_for(k):
                 due.append((k, "max_batch"))
-            elif self.policy.max_delay_s is not None and \
-                    now - reqs[0].t_enqueue >= self.policy.max_delay_s:
+            elif delay is not None and \
+                    now - reqs[0].t_enqueue >= delay:
                 due.append((k, "deadline"))
         return due
 
     def _nearest_deadline(self) -> Optional[float]:
-        if self.policy.max_delay_s is None:
+        if not self._may_deadline():
             return None
         now = time.monotonic()
-        waits = [self.policy.max_delay_s - (now - reqs[0].t_enqueue)
-                 for reqs in self._pending.values() if reqs]
+        waits = []
+        for k, reqs in self._pending.items():
+            if not reqs:
+                continue
+            delay = self._delay_for(k)
+            if delay is not None:
+                waits.append(delay - (now - reqs[0].t_enqueue))
         if not waits:
             return None
         return max(1e-4, min(waits))

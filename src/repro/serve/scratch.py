@@ -1,0 +1,73 @@
+"""Pooled host staging buffers for the batcher's gather/scatter.
+
+Every flush used to allocate fresh numpy arrays twice: once to assemble
+the mega-batch (concat) and once to land the device->host result.  At
+serving rates that is allocator traffic and page-fault noise on the hot
+path.  :class:`ScratchPool` keeps a small set of flat byte buffers and
+hands out typed views; a buffer is reused only when **no view of it is
+still alive** (checked via the base array's refcount), so result rows
+scattered to callers stay valid for as long as the caller holds them —
+reuse safety is structural, not a usage convention.
+
+The pool is intentionally dumb: first-fit over capacity, buffers only
+grow, at most ``max_buffers`` retained.  In steady state (callers
+consume results promptly) every flush is a pool hit; a caller that
+parks its rows forever merely costs one buffer, never corruption.
+"""
+from __future__ import annotations
+
+import sys
+import threading
+from typing import Tuple
+
+import numpy as np
+
+
+class ScratchPool:
+    """Reusable pinned host buffers, refcount-guarded against live views."""
+
+    def __init__(self, max_buffers: int = 16, min_bytes: int = 4096):
+        self.max_buffers = max_buffers
+        self.min_bytes = min_bytes
+        self._lock = threading.Lock()
+        self._bufs: list = []
+        self.hits = 0
+        self.misses = 0
+
+    def take(self, shape: Tuple[int, ...], dtype) -> np.ndarray:
+        """A writable ndarray view of ``shape``/``dtype`` on pooled memory.
+
+        The view pins its backing buffer (refcount) until dropped, so
+        callers just let it go out of scope — there is no ``release``.
+        Contents are uninitialized; callers overwrite every row they
+        hand out (the batcher zero-fills only the padding tail).
+        """
+        dtype = np.dtype(dtype)
+        n = 1
+        for d in shape:
+            n *= int(d)
+        if n == 0:
+            return np.empty(shape, dtype)
+        nbytes = n * dtype.itemsize
+        with self._lock:
+            for buf in self._bufs:
+                # refs while idle: the pool's list slot, the loop var,
+                # and getrefcount's own argument -> 3.  Any live view
+                # holds the base chain and pushes this past 3.
+                if buf.nbytes >= nbytes and sys.getrefcount(buf) <= 3:
+                    self.hits += 1
+                    return buf[:nbytes].view(dtype).reshape(shape)
+            self.misses += 1
+            buf = np.empty((max(nbytes, self.min_bytes),), np.uint8)
+            self._bufs.append(buf)
+            if len(self._bufs) > self.max_buffers:
+                # dropping a busy buffer is safe: outstanding views keep
+                # it alive, it just stops being pool-managed
+                self._bufs.pop(0)
+            return buf[:nbytes].view(dtype).reshape(shape)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"buffers": len(self._bufs),
+                    "bytes": sum(b.nbytes for b in self._bufs),
+                    "hits": self.hits, "misses": self.misses}

@@ -18,8 +18,9 @@ threads flush concurrently.
 from __future__ import annotations
 
 import threading
+import time
 from collections import Counter, deque
-from typing import Deque, Dict
+from typing import Deque, Dict, Tuple
 
 
 def _percentile(sorted_vals, q: float) -> float:
@@ -53,6 +54,9 @@ class ServeStats:
         self.flush_reasons: Counter = Counter()
         self.busy_s = 0.0         # wall time spent inside dispatches
         self._lat: Deque[float] = deque(maxlen=latency_window)
+        # (monotonic time, rows) of recent submits: the adaptive flush
+        # controller reads the observed arrival rate from this window
+        self._arrivals: Deque[Tuple[float, int]] = deque(maxlen=256)
 
     # ------------------------------------------------------------ hooks ---
     def on_enqueue(self, rows: int) -> None:
@@ -61,6 +65,7 @@ class ServeStats:
             self.rows_enqueued += rows
             self.queue_depth_rows += rows
             self.queue_depth_requests += 1
+            self._arrivals.append((time.monotonic(), rows))
 
     def on_failure(self, *, requests: int, rows: int, reason: str,
                    busy_s: float) -> None:
@@ -93,6 +98,17 @@ class ServeStats:
             self.busy_s += busy_s
             self._lat.extend(latencies_s)
 
+    def arrival_rate_rows_s(self, now: float = None) -> float:
+        """Observed submit rate (rows/s) over the recent arrival window.
+
+        0.0 until at least two submits have landed — callers (the
+        adaptive flush controller) treat that as "stats cold" and fall
+        back to their static policy.  The rate decays naturally when a
+        key goes quiet: the window's span stretches to ``now``.
+        """
+        with self._lock:
+            return self._arrival_rate_locked(now)
+
     # --------------------------------------------------------- snapshot ---
     def snapshot(self) -> Dict:
         with self._lock:
@@ -120,7 +136,20 @@ class ServeStats:
                 "latency_p50_ms": _percentile(lat, 0.50) * 1e3,
                 "latency_p99_ms": _percentile(lat, 0.99) * 1e3,
                 "rows_per_s": rows_per_s,
+                "arrival_rate_rows_s": self._arrival_rate_locked(),
             }
+
+    def _arrival_rate_locked(self, now: float = None) -> float:
+        if len(self._arrivals) < 2:
+            return 0.0
+        span = (time.monotonic() if now is None else now) \
+            - self._arrivals[0][0]
+        if span <= 0:
+            return 0.0
+        # rows after the window's first submit, over the span since it:
+        # the first submit opens the window, it doesn't fill it
+        rows = sum(r for _, r in self._arrivals) - self._arrivals[0][1]
+        return rows / span
 
     def __repr__(self):  # pragma: no cover - debugging aid
         s = self.snapshot()

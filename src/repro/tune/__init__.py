@@ -1,0 +1,23 @@
+"""Measurement-driven autotuning for the inference hot path.
+
+Two closed loops (see README.md):
+
+  * **kernel tuning** — sweep ``fused_mlp`` batch tiles over the shapes
+    the engine serves, validate against the ref oracle, persist winners
+    (``kernel_tuner`` + ``cache``); the kernel op consults the cache
+    instead of its hardcoded default.
+  * **flush control** — pick the serve queue's deadline and batch
+    target from the observed arrival rate and the roofline-predicted
+    batch latency (``controller``), degrading to the static policy
+    while stats are cold.
+"""
+from repro.tune.cache import TuneCache, best_tile, default_cache, shape_key
+from repro.tune.controller import (AdaptiveFlushController, mlp_resources,
+                                   predict_batch_latency_s)
+from repro.tune.kernel_tuner import (autotune, candidate_tiles, serve_buckets,
+                                     sweep_fused_mlp, widths_from_spec)
+
+__all__ = ["AdaptiveFlushController", "TuneCache", "autotune", "best_tile",
+           "candidate_tiles", "default_cache", "mlp_resources",
+           "predict_batch_latency_s", "serve_buckets", "shape_key",
+           "sweep_fused_mlp", "widths_from_spec"]

@@ -1,0 +1,163 @@
+"""On-disk autotune cache: measured kernel configs keyed by served shape.
+
+One JSON file per kernel under ``artifacts/tune/`` (e.g.
+``fused_mlp.json``) maps a shape key to the measured winner:
+
+    key:    "<w0-w1-...-wn>|<dtype>|<backend>|b<bucket>"
+    record: {"batch_tile": int, "us": float, "default_us": float,
+             "speedup_x": float, "exact": bool, "swept": [...]}
+
+The *bucket* is the serve-path batch bucket (power of two — the only
+batch shapes the engine's ``apply_batched`` ever dispatches), so eager
+calls of any size hit the same entry their padded bucket would.
+
+Lookups sit on the trace-time hot path (``fused_mlp_op`` consults the
+cache while the engine's apply is being traced), so the file is parsed
+once and memoized; an mtime fingerprint re-reads it when another
+process (``tune.autotune`` warm-up, ``dryrun --tune``) rewrites it.
+Writes are atomic (tmp + rename) so a crashed sweep never leaves a
+torn file behind.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import tempfile
+import threading
+from typing import Dict, Iterable, Optional
+
+import numpy as np
+
+ART = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "tune"
+
+
+def _dtype_name(dtype) -> str:
+    """Canonical dtype spelling: jnp.float32 (a type), np.float32, and an
+    array's ``.dtype`` must all key identically — str() on the raw type
+    yields "<class ...>" and would split the cache between the tuner
+    (stores types) and the serving path (looks up array dtypes)."""
+    try:
+        return str(np.dtype(dtype))
+    except TypeError:
+        return str(dtype)
+
+
+def shape_key(widths: Iterable[int], dtype, backend: str, bucket: int) -> str:
+    w = "-".join(str(int(v)) for v in widths)
+    return f"{w}|{_dtype_name(dtype)}|{backend}|b{int(bucket)}"
+
+
+class TuneCache:
+    """Persistent measured-config store for one kernel family."""
+
+    def __init__(self, kernel: str = "fused_mlp", path=None):
+        self.kernel = kernel
+        self.path = pathlib.Path(path) if path is not None else (
+            ART / f"{kernel}.json")
+        self._lock = threading.Lock()
+        self._mem: Dict[str, dict] = {}
+        self._fingerprint = None  # (mtime_ns, size) of the last read
+
+    # ---------------------------------------------------------- storage ---
+    def _file_fingerprint(self):
+        try:
+            st = os.stat(self.path)
+            return (st.st_mtime_ns, st.st_size)
+        except OSError:
+            return None
+
+    def _refresh_locked(self) -> None:
+        fp = self._file_fingerprint()
+        if fp == self._fingerprint:
+            return
+        self._fingerprint = fp
+        if fp is None:
+            self._mem = {}
+            return
+        try:
+            data = json.loads(self.path.read_text())
+            self._mem = data if isinstance(data, dict) else {}
+        except (OSError, ValueError):
+            # a torn/corrupt cache is a cache miss, never a crash
+            self._mem = {}
+
+    def _save_locked(self) -> None:
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
+                                   prefix=self.path.name, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self._mem, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        self._fingerprint = self._file_fingerprint()
+
+    # -------------------------------------------------------------- api ---
+    def lookup(self, widths, dtype, backend: str,
+               bucket: int) -> Optional[dict]:
+        with self._lock:
+            self._refresh_locked()
+            return self._mem.get(shape_key(widths, dtype, backend, bucket))
+
+    def store(self, widths, dtype, backend: str, bucket: int,
+              record: dict) -> None:
+        with self._lock:
+            self._refresh_locked()  # merge with concurrent writers' entries
+            self._mem[shape_key(widths, dtype, backend, bucket)] = record
+            self._save_locked()
+
+    def entries(self) -> Dict[str, dict]:
+        with self._lock:
+            self._refresh_locked()
+            return dict(self._mem)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._mem = {}
+            if self.path.exists():
+                self.path.unlink()
+            self._fingerprint = None
+
+
+# process-wide default cache (what the serving hot path consults)
+_default: Dict[str, TuneCache] = {}
+_default_lock = threading.Lock()
+
+
+def default_cache(kernel: str = "fused_mlp") -> TuneCache:
+    with _default_lock:
+        c = _default.get(kernel)
+        if c is None:
+            c = _default[kernel] = TuneCache(kernel)
+        return c
+
+
+def best_tile(widths, dtype, backend: str, batch: int) -> Optional[int]:
+    """Tuned ``batch_tile`` for a fused_mlp call, or None when untuned.
+
+    The exact batch is tried first — serve-path dispatches (and the
+    per-shard batches inside ``fused_mlp_sharded``) arrive already
+    bucket-shaped, including the non-power-of-two buckets a shard-count
+    rounding produces — then the power-of-two bucket, which covers
+    eager calls of arbitrary size.  Only validated winners are
+    returned — the kernel must never pick up a tile that failed the
+    exactness check against ref.py.
+    """
+    from repro.serve.batcher import bucket_size
+    cache = default_cache()
+    batch = int(batch)
+    rec = None
+    for bucket in dict.fromkeys((batch, bucket_size(batch))):
+        rec = cache.lookup(widths, dtype, backend, bucket)
+        if rec is not None:
+            break
+    if rec is None or not rec.get("exact", False):
+        return None
+    tile = int(rec["batch_tile"])
+    return tile if tile > 0 else None

@@ -1,0 +1,213 @@
+"""Adaptive flush control: close the loop between arrival rate and the
+roofline-predicted cost of serving a batch.
+
+A static ``FlushPolicy.max_delay_s`` is wrong at both ends: at high
+arrival rates it waits long after an efficient batch has accumulated; at
+low rates it parks a lone caller for the full deadline even though the
+mesh could serve it in microseconds.  The paper's Observation 2 frames
+the underlying tradeoff — small-batch surrogate calls waste the
+hardware — so the controller picks, per serving key:
+
+  * a **bucket target** B*: the smallest power-of-two batch whose
+    roofline-predicted per-row latency is within ``amortize_eps`` of the
+    large-batch asymptote (past B*, fatter batches barely help);
+  * a **deadline**: the time the observed arrival rate needs to
+    accumulate B* rows, capped at ``service_factor`` x the predicted
+    service time of B* (waiting much longer than a batch costs to serve
+    buys nothing) and clamped to ``[min_delay_s, max_delay_s]``.
+
+Degradation is graceful and layered: the roofline term needs only the
+net's widths, so it applies from the very first request; the arrival
+rate needs warm stats, so the fill term stays out of the decision until
+``warmup_requests`` submits have been observed.  A key whose widths
+cannot be derived from its bundle (not a pure MLP, missing spec) falls
+all the way back to the static policy values, so a queue with a
+controller can never behave worse than its ``FlushPolicy``.
+
+The latency model reuses :class:`repro.dist.hlo_analysis.Roofline` with
+the fused-MLP resource counts (weights stream once per batch, the
+intermediate activations stay in VMEM) plus a fixed dispatch overhead —
+the measured floor of a jit'd apply, which dominates for the small nets
+the NAS space emits.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import threading
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.dist.hlo_analysis import HBM_BW, PEAK_FLOPS, Roofline
+
+
+def mlp_resources(widths, batch: int, dtype_bytes: int = 4):
+    """(flops, hbm_bytes) for one fused-MLP batch of ``batch`` rows."""
+    wsum = sum(a * b for a, b in zip(widths[:-1], widths[1:]))
+    flops = batch * (2.0 * wsum + sum(widths[1:]))  # dots + bias adds
+    weight_bytes = (wsum + sum(widths[1:])) * dtype_bytes
+    io_bytes = batch * (widths[0] + widths[-1]) * dtype_bytes
+    return flops, weight_bytes + io_bytes
+
+
+def predict_batch_latency_s(widths, batch: int, *, chips: int = 1,
+                            dtype_bytes: int = 4,
+                            overhead_s: float = 150e-6,
+                            peak_flops: float = PEAK_FLOPS,
+                            hbm_bw: float = HBM_BW) -> float:
+    """Roofline-predicted wall time to serve one batch of ``batch`` rows."""
+    flops, hbm = mlp_resources(widths, batch, dtype_bytes)
+    roof = Roofline(flops_global=flops, hbm_bytes_global=hbm,
+                    coll_bytes_global=0.0, chips=chips, model_flops=flops,
+                    peak_flops=peak_flops, hbm_bw=hbm_bw)
+    return roof.step_time_s + overhead_s
+
+
+def _default_widths_for(key: str):
+    """Derive fused-MLP widths from a bundle path (the serve-queue key)."""
+    from repro.tune.kernel_tuner import widths_from_spec
+    spec = json.loads((pathlib.Path(key) / "spec.json").read_text())
+    return widths_from_spec(spec)
+
+
+class AdaptiveFlushController:
+    """Per-key closed-loop (deadline, bucket-target) policy.
+
+    Plug into a queue with ``ServeQueue(policy, controller=ctrl)``; the
+    queue consults :meth:`delay_for` wherever it used the static
+    ``policy.max_delay_s`` and :meth:`batch_rows_for` for the max-batch
+    trigger.  Both run under the queue lock, so they are kept cheap:
+    widths resolve once per key ever (spec.json is read on first touch
+    and the result — including failure — is cached), bucket targets are
+    cached per key, and full delay decisions are memoized for
+    ``decision_ttl_s`` so a dispatcher that wakes every few hundred
+    microseconds re-prices a key at most once per TTL window.
+    """
+
+    def __init__(self, policy=None, *,
+                 widths_for: Optional[Callable] = None,
+                 chips: int = 1,
+                 min_delay_s: float = 2e-4,
+                 max_delay_s: float = 0.05,
+                 warmup_requests: int = 8,
+                 service_factor: float = 4.0,
+                 amortize_eps: float = 0.1,
+                 overhead_s: float = 150e-6,
+                 decision_ttl_s: float = 0.01,
+                 peak_flops: float = PEAK_FLOPS,
+                 hbm_bw: float = HBM_BW):
+        if policy is None:
+            from repro.serve.queue import FlushPolicy
+            policy = FlushPolicy()
+        self.policy = policy
+        self.chips = chips
+        self.min_delay_s = min_delay_s
+        self.max_delay_s = max_delay_s
+        self.warmup_requests = warmup_requests
+        self.service_factor = service_factor
+        self.amortize_eps = amortize_eps
+        self.overhead_s = overhead_s
+        self.decision_ttl_s = decision_ttl_s
+        self.peak_flops = peak_flops
+        self.hbm_bw = hbm_bw
+        self._widths_for = widths_for or _default_widths_for
+        self._lock = threading.Lock()
+        self._widths: Dict[str, Optional[list]] = {}
+        self._targets: Dict[str, int] = {}
+        self._memo: Dict[str, Tuple[float, Optional[float]]] = {}
+        self.last_decision: Dict[str, dict] = {}  # observability, per key
+
+    # ------------------------------------------------------------ model ---
+    def _widths_cached(self, key: str):
+        with self._lock:
+            if key in self._widths:
+                return self._widths[key]
+        try:
+            w = self._widths_for(key)
+        except Exception:
+            w = None  # unknown bundle shape -> degrade to static policy
+        with self._lock:
+            self._widths[key] = w
+        return w
+
+    def predict_latency_s(self, widths, batch: int) -> float:
+        return predict_batch_latency_s(
+            widths, batch, chips=self.chips, overhead_s=self.overhead_s,
+            peak_flops=self.peak_flops, hbm_bw=self.hbm_bw)
+
+    def _bucket_target(self, key: str, widths) -> int:
+        """Smallest power-of-two bucket within amortize_eps of the
+        asymptotic per-row latency — past it, bigger batches mostly add
+        queueing delay, not throughput."""
+        with self._lock:
+            if key in self._targets:
+                return self._targets[key]
+        from repro.serve.batcher import bucket_size
+        lo = bucket_size(1, self.policy.min_bucket)
+        hi = bucket_size(self.policy.max_batch_rows, self.policy.min_bucket)
+        asymptote = self.predict_latency_s(widths, hi) / hi
+        target = hi
+        b = lo
+        while b <= hi:
+            if self.predict_latency_s(widths, b) / b <= \
+                    (1.0 + self.amortize_eps) * asymptote:
+                target = b
+                break
+            b *= 2
+        with self._lock:
+            self._targets[key] = target
+        return target
+
+    # ---------------------------------------------------- queue contract ---
+    def delay_for(self, key: str, stats) -> Optional[float]:
+        """Deadline for ``key``'s oldest pending request.
+
+        Two terms, different information sources:
+
+          * the **service cap** (``service_factor`` x predicted batch
+            latency) comes from the roofline model alone — available
+            from the first request, no observation needed;
+          * the **fill time** (bucket target / arrival rate) needs warm
+            stats; until ``warmup_requests`` submits it is infinite and
+            the cap governs.
+
+        Only a key whose widths cannot be derived (non-MLP bundle,
+        missing spec) degrades all the way to the static policy value.
+        """
+        now = time.monotonic()
+        memo = self._memo.get(key)
+        if memo is not None and now - memo[0] < self.decision_ttl_s:
+            return memo[1]
+        static = self.policy.max_delay_s
+        widths = self._widths_cached(key)
+        if not widths:
+            self._memo[key] = (now, static)
+            return static
+        target = self._bucket_target(key, widths)
+        t_serve = self.predict_latency_s(widths, target)
+        rate = 0.0
+        if stats is not None and \
+                stats.requests_enqueued >= self.warmup_requests:
+            rate = stats.arrival_rate_rows_s()
+        fill_s = target / rate if rate > 0.0 else float("inf")
+        delay = min(fill_s, self.service_factor * t_serve)
+        hi = static if static is not None else self.max_delay_s
+        delay = max(self.min_delay_s, min(delay, hi))
+        self.last_decision[key] = {
+            "arrival_rate_rows_s": rate, "bucket_target": target,
+            "predicted_batch_latency_s": t_serve, "fill_s": fill_s,
+            "delay_s": delay}
+        self._memo[key] = (now, delay)
+        return delay
+
+    def batch_rows_for(self, key: str, stats) -> int:
+        """Adaptive max-batch trigger: flush once the efficient bucket
+        has accumulated instead of waiting for the static cap.  Pure
+        model (no observed stats needed), so it applies from the first
+        request."""
+        del stats
+        cap = self.policy.max_batch_rows
+        widths = self._widths_cached(key)
+        if not widths:
+            return cap
+        return min(cap, self._bucket_target(key, widths))

@@ -1,0 +1,230 @@
+"""Measurement-driven batch-tile autotuning for the fused_mlp kernel.
+
+``fused_mlp`` tiles the batch over the Pallas grid with a hardcoded 128
+unless told otherwise; the right tile depends on the net's widths, the
+dtype, and the batch bucket the serve path actually dispatches.  This
+module sweeps the candidate tiles that fit VMEM (``fits_vmem`` — exact
+accounting, see fused_mlp.py), validates every candidate bit-for-bit
+against the ``ref.py`` oracle, and persists winners in the on-disk
+:class:`repro.tune.cache.TuneCache` that ``fused_mlp_op`` consults.
+
+Entry points:
+
+  * :func:`sweep_fused_mlp` — one (widths, bucket) cell: measure, pick,
+    store.
+  * :func:`autotune` — warm-up over the shapes an engine bundle serves
+    (the buckets ``InferenceEngine.apply_batched`` can produce), or over
+    explicit widths.  Call it once at deploy; the cache makes it free
+    afterwards.
+
+Measurements run whatever path the op would take on this backend: the
+compiled Pallas kernel on TPU, interpret mode elsewhere (slower in
+absolute terms, but the grid/tile tradeoff ranks the same way: fewer,
+fatter tiles amortize per-step overhead until VMEM or padding waste
+pushes back).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Iterable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.fused_mlp.fused_mlp import fits_vmem, fused_mlp
+from repro.kernels.fused_mlp.ref import fused_mlp_ref
+from repro.tune.cache import TuneCache, default_cache
+
+DEFAULT_TILE = 128
+_CANDIDATE_TILES = (16, 32, 64, 128, 256, 512)
+
+
+def widths_from_spec(spec: dict) -> Optional[List[int]]:
+    """Dense widths of a pure-MLP bundle spec, or None if not pure-MLP.
+
+    Mirrors the adapter logic in ``fused_mlp_from_spec``: flatten folds
+    trailing dims into the feature dim, acts don't change widths.
+    """
+    in_shape = spec.get("in_shape") or ()
+    feat = 1
+    for d in in_shape[1:]:
+        feat *= int(d)
+    widths = [feat]
+    for layer in spec.get("layers", ()):
+        kind = layer.get("kind")
+        if kind == "dense":
+            widths.append(int(layer["features"]))
+        elif kind in ("act", "flatten"):
+            continue
+        else:
+            return None  # conv/pool/... : not the fused kernel's shape
+    return widths if len(widths) > 1 else None
+
+
+def _acts_for(n_layers: int, acts=None) -> tuple:
+    if acts is not None:
+        return tuple(acts)
+    return ("relu",) * (n_layers - 1) + ("identity",)
+
+
+def candidate_tiles(widths: Sequence[int], bucket: int,
+                    extra: Iterable[int] = ()) -> List[int]:
+    """Tiles worth sweeping for one bucket: the standard ladder clipped
+    to the bucket, the bucket itself (grid of 1), and any extras —
+    deduped, VMEM-checked, default first so ties keep the default."""
+    cands = [DEFAULT_TILE]
+    for t in list(_CANDIDATE_TILES) + [bucket] + list(extra):
+        t = int(t)
+        if t <= 0 or t > bucket or t in cands:
+            continue
+        cands.append(t)
+    return [t for t in cands if fits_vmem(widths, t)]
+
+
+def _measure_us(fn, reps: int, warmup: int) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6
+
+
+def sweep_fused_mlp(widths: Sequence[int], bucket: int, *,
+                    dtype=jnp.float32, acts=None, reps: int = 5,
+                    warmup: int = 2, cache: Optional[TuneCache] = None,
+                    seed: int = 0, force: bool = False) -> dict:
+    """Measure every candidate tile for one (widths, bucket) cell.
+
+    Returns (and persists) the record ``fused_mlp_op`` will consult.
+    Candidates whose output is not bit-identical to the ref oracle are
+    disqualified — a tuned config must never change serving results.
+    """
+    widths = [int(w) for w in widths]
+    bucket = int(bucket)
+    cache = cache or default_cache()
+    backend = jax.default_backend()
+    cached = None if force else cache.lookup(widths, dtype, backend, bucket)
+    if cached is not None:
+        return cached
+
+    acts = _acts_for(len(widths) - 1, acts)
+    rng = np.random.default_rng(seed)
+    ws = [jnp.asarray(rng.normal(size=(a, b)).astype(np.float32) * 0.3,
+                      dtype) for a, b in zip(widths[:-1], widths[1:])]
+    bs = [jnp.asarray(rng.normal(size=(b,)).astype(np.float32) * 0.1, dtype)
+          for b in widths[1:]]
+    x = jnp.asarray(rng.normal(size=(bucket, widths[0])).astype(np.float32),
+                    dtype)
+    # jitted oracle: the serving path always runs compiled, and XLA's
+    # eager-vs-compiled dots round differently — compare like with like
+    ref = np.asarray(jax.jit(fused_mlp_ref, static_argnames=("acts",))(
+        x, ws, bs, acts=acts))
+    interpret = backend != "tpu"
+
+    swept = []
+    for tile in candidate_tiles(widths, bucket):
+        fn = jax.jit(functools.partial(fused_mlp, batch_tile=tile,
+                                       interpret=interpret),
+                     static_argnames=("acts",))
+        try:
+            out = np.asarray(fn(x, ws, bs, acts=acts))
+            exact = bool(np.array_equal(out, ref))
+            us = _measure_us(lambda: fn(x, ws, bs, acts=acts), reps, warmup)
+        except Exception as e:  # a tile the backend rejects is just skipped
+            swept.append({"batch_tile": tile, "us": None, "exact": False,
+                          "error": f"{type(e).__name__}: {e}"[:200]})
+            continue
+        swept.append({"batch_tile": tile, "us": round(us, 2),
+                      "exact": exact})
+
+    valid = [s for s in swept if s["exact"]]
+    default = next((s for s in swept
+                    if s["batch_tile"] == DEFAULT_TILE and s["us"]), None)
+    if valid:
+        best = min(valid, key=lambda s: s["us"])
+        default_us = default["us"] if default else best["us"]
+        rec = {"batch_tile": best["batch_tile"], "us": best["us"],
+               "default_us": default_us,
+               "speedup_x": round(default_us / best["us"], 3)
+               if best["us"] else 1.0,
+               "exact": True, "backend": backend, "swept": swept,
+               "tuned_at": time.time()}
+    else:  # nothing validated: record the failure so we don't re-sweep,
+        # but best_tile() will refuse to serve it (exact=False)
+        rec = {"batch_tile": DEFAULT_TILE, "us": None,
+               "default_us": default["us"] if default else None,
+               "speedup_x": 1.0, "exact": False, "backend": backend,
+               "swept": swept, "tuned_at": time.time()}
+    cache.store(widths, dtype, backend, bucket, rec)
+    return rec
+
+
+def serve_buckets(min_bucket: int = 8, max_batch_rows: int = 1024,
+                  n_shards: int = 1) -> List[int]:
+    """The batch buckets ``apply_batched`` can actually dispatch for a
+    flush policy: powers of two from the (shard-raised) floor up to the
+    bucket covering max_batch_rows."""
+    from repro.serve.batcher import bucket_for
+    lo = bucket_for(1, min_bucket, n_shards)
+    hi = bucket_for(max_batch_rows, min_bucket, n_shards)
+    out, b = [], lo
+    while b < hi:
+        out.append(b)
+        b *= 2
+    out.append(hi)
+    return out
+
+
+def autotune(target, buckets: Optional[Sequence[int]] = None, *,
+             dtype=jnp.float32, policy=None, n_shards: int = 1,
+             reps: int = 5, warmup: int = 2,
+             cache: Optional[TuneCache] = None,
+             force: bool = False, verbose: bool = False) -> List[dict]:
+    """Warm the tune cache for everything an engine will serve.
+
+    ``target`` is a bundle path (widths derived from its spec.json) or
+    an explicit widths sequence.  ``buckets`` defaults to the serve-path
+    buckets for ``policy`` (a FlushPolicy, or the default policy).
+    Returns the per-bucket records; after this, every
+    ``InferenceEngine.apply_batched`` shape hits a tuned tile.
+    """
+    if isinstance(target, (list, tuple)):
+        widths = [int(w) for w in target]
+    else:
+        import json
+        import pathlib
+        spec = json.loads(
+            (pathlib.Path(str(target)) / "spec.json").read_text())
+        widths = widths_from_spec(spec)
+        if widths is None:
+            raise ValueError(f"bundle {target!r} is not a pure MLP; "
+                             "fused_mlp autotuning does not apply")
+    if buckets is None:
+        if policy is None:
+            from repro.serve.queue import FlushPolicy
+            policy = FlushPolicy()
+        buckets = serve_buckets(policy.min_bucket, policy.max_batch_rows,
+                                n_shards)
+    buckets = set(int(b) for b in buckets)
+    if n_shards > 1:
+        # under shard_map the kernel sees the *per-shard* batch; warm
+        # those shapes too so the sharded path hits tuned tiles
+        buckets |= {b // n_shards for b in buckets
+                    if b % n_shards == 0 and b // n_shards >= 1}
+    recs = []
+    for b in sorted(buckets):
+        rec = sweep_fused_mlp(widths, b, dtype=dtype, reps=reps,
+                              warmup=warmup, cache=cache, force=force)
+        recs.append(rec)
+        if verbose:
+            print(f"[tune] widths={widths} bucket={b}: "
+                  f"tile={rec['batch_tile']} "
+                  f"{rec['us']}us vs default {rec['default_us']}us "
+                  f"({rec['speedup_x']}x) exact={rec['exact']}",
+                  flush=True)
+    return recs

@@ -66,6 +66,75 @@ def test_bucket_for_respects_data_shard_count():
     assert all(bucket_for(n, 8, 6) % 6 == 0 for n in range(1, 50))
 
 
+def test_bucket_size_edges():
+    from repro.serve import bucket_for
+    # n=0: the floor governs (a zero-row dispatch never happens, but the
+    # controller's target math must not blow up on it)
+    assert bucket_size(0) == 8
+    assert bucket_for(0, 8, 16) == 16
+    # n just past a power of two: next bucket, not the same one
+    assert bucket_size(9) == 16
+    assert bucket_size(129) == 256
+    assert bucket_size(1025) == 2048
+    assert bucket_for(257, 8, 8) == 512
+
+
+def test_bucket_for_more_shards_than_rows():
+    from repro.serve import bucket_for
+    # n_shards > n: the bucket must still cover every shard, or the
+    # data axis silently drops to replication
+    assert bucket_for(3, 8, 16) == 16
+    assert bucket_for(1, 2, 6) == 6
+    assert bucket_for(5, 2, 6) == 6
+    for n in range(1, 8):
+        b = bucket_for(n, 2, 12)
+        assert b >= 12 and b % 12 == 0
+
+
+def test_deadline_flush_under_concurrent_submitters(tmp_path):
+    """Many threads race the dispatcher's deadline: every future must
+    resolve exactly once, with totals consistent and rows bit-identical
+    to a synchronous engine call (the corner the adaptive controller
+    leans on — per-key deadlines recomputed while submits keep landing).
+    """
+    import threading
+    mp = _lin_bundle(tmp_path, "conc")
+    eng = InferenceEngine.get(mp)
+    q = ServeQueue(FlushPolicy(max_batch_rows=10 ** 6, max_delay_s=0.01,
+                               max_pending_rows=10 ** 6))
+    results, errors = {}, []
+
+    def submitter(tid):
+        try:
+            for i in range(4):
+                x = _rows(3, seed=100 * tid + i)
+                f = q.submit(mp, x)
+                results[(tid, i)] = (x, f)
+                time.sleep(0.003)
+        except Exception as e:  # pragma: no cover - failure reporting
+            errors.append(e)
+
+    with q:
+        threads = [threading.Thread(target=submitter, args=(t,))
+                   for t in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        outs = {k: (x, np.asarray(f.result(timeout=10)))
+                for k, (x, f) in results.items()}
+    assert not errors
+    assert len(outs) == 32
+    for x, y in outs.values():
+        np.testing.assert_array_equal(y, np.asarray(eng(x)))
+    st = q.stats(mp).snapshot()
+    assert st["rows_completed"] == st["rows_enqueued"] == 96
+    assert st["requests_completed"] == 32 and st["requests_failed"] == 0
+    assert st["queue_depth_rows"] == 0 and st["queue_depth_requests"] == 0
+    assert st["flush_reasons"].get("deadline", 0) >= 1
+    assert st["arrival_rate_rows_s"] > 0
+
+
 def test_apply_batched_matches_call_and_pads(tmp_path):
     mp = _lin_bundle(tmp_path)
     eng = InferenceEngine.get(mp)
