@@ -55,7 +55,15 @@ def _measure(fn, reps=5, warmup=2):
 
 
 def serving_throughput(fast=False, *, n_callers=None, rows_per_call=8):
-    """CSV rows comparing per-call vs coalesced serving on the host mesh."""
+    """benchmarks.run entry: CSV rows only (drops the latency table)."""
+    rows, _ = serving_throughput_full(fast=fast, n_callers=n_callers,
+                                      rows_per_call=rows_per_call)
+    return rows
+
+
+def serving_throughput_full(fast=False, *, n_callers=None, rows_per_call=8):
+    """CSV rows comparing per-call vs coalesced serving on the host mesh,
+    plus the per-bucket measured-vs-roofline latency table."""
     import pathlib
     import tempfile
 
@@ -128,6 +136,8 @@ def serving_throughput(fast=False, *, n_callers=None, rows_per_call=8):
     rows_s_coal = total / t_coal
     rows_s_adapt = total / t_adapt
     speedup = rows_s_coal / rows_s_call
+    model_err = latency_model_rows(ad_queue, mp)
+    worst_err = max((abs(r["err_pct"]) for r in model_err), default=0.0)
     derived = (f"devices={ndev};callers={n_callers};"
                f"rows_per_call={rows_per_call};"
                f"percall_rows_s={rows_s_call:.0f};"
@@ -139,8 +149,53 @@ def serving_throughput(fast=False, *, n_callers=None, rows_per_call=8):
                f"adaptive_rows_s={rows_s_adapt:.0f};"
                f"adaptive_p50_ms={ast['latency_p50_ms']:.2f};"
                f"adaptive_p99_ms={ast['latency_p99_ms']:.2f};"
-               f"scratch_hit_rate={pool['hits'] / max(1, pool['hits'] + pool['misses']):.2f}")
-    return [("serve_throughput/binomial", t_coal / n_callers * 1e6, derived)]
+               f"scratch_hit_rate={pool['hits'] / max(1, pool['hits'] + pool['misses']):.2f};"
+               f"roofline_worst_err_pct={worst_err:.0f}")
+    return ([("serve_throughput/binomial", t_coal / n_callers * 1e6,
+              derived)], model_err)
+
+
+def latency_model_rows(ad_queue, mp):
+    """Per-bucket measured-vs-roofline batch latency error.
+
+    The adaptive controller's deadline model starts from the roofline
+    prediction and converges on measured ``ServeStats`` latencies; this
+    table makes the model's drift visible (a large error means the
+    open-loop prior was badly miscalibrated for this backend — exactly
+    what the measured loop corrects, and what EXPERIMENTS.md should
+    show).
+    """
+    ctrl = ad_queue.controller
+    st = ad_queue.stats(mp)
+    widths = ctrl._widths_cached(mp) if ctrl is not None else None
+    rows = []
+    if not widths:
+        return rows
+    for bucket, (ewma_s, n) in sorted(st.batch_latencies().items()):
+        pred_s = ctrl.predict_latency_s(widths, bucket)
+        err = (pred_s - ewma_s) / ewma_s * 100.0 if ewma_s > 0 else 0.0
+        rows.append({"bucket": bucket, "batches": n,
+                     "measured_ms": ewma_s * 1e3,
+                     "roofline_ms": pred_s * 1e3, "err_pct": err})
+    return rows
+
+
+def _markdown(rows, model_err):
+    kv = dict(item.split("=", 1) for item in rows[0][2].split(";"))
+    out = ["### Serving throughput (8-device host mesh)", "",
+           "| path | rows/s |", "|---|---:|",
+           f"| per-call `MLRegion._infer` | {kv['percall_rows_s']} |",
+           f"| coalesced `ServeQueue` | {kv['coalesced_rows_s']} |",
+           f"| adaptive controller | {kv['adaptive_rows_s']} |",
+           "", "### Measured vs roofline batch latency (adaptive queue)",
+           "",
+           "| bucket | batches | measured ms | roofline ms | error |",
+           "|---:|---:|---:|---:|---:|"]
+    for r in model_err:
+        out.append(f"| {r['bucket']} | {r['batches']} | "
+                   f"{r['measured_ms']:.3f} | {r['roofline_ms']:.3f} | "
+                   f"{r['err_pct']:+.0f}% |")
+    return "\n".join(out)
 
 
 def main():
@@ -149,11 +204,18 @@ def main():
                     help=f"fail unless coalesced >= {CHECK_SPEEDUP}x per-call"
                          " rows/s and outputs are bitwise equal")
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--markdown", action="store_true",
+                    help="print markdown tables incl. the per-bucket "
+                         "measured-vs-roofline latency error "
+                         "(for EXPERIMENTS.md)")
     args = ap.parse_args()
-    rows = serving_throughput(fast=args.fast)
-    print("name,us_per_call,derived")
-    for n, us, derived in rows:
-        print(f"{n},{us:.2f},{derived}", flush=True)
+    rows, model_err = serving_throughput_full(fast=args.fast)
+    if args.markdown:
+        print(_markdown(rows, model_err))
+    else:
+        print("name,us_per_call,derived")
+        for n, us, derived in rows:
+            print(f"{n},{us:.2f},{derived}", flush=True)
     if args.check:
         kv = dict(item.split("=") for item in rows[0][2].split(";"))
         speedup = float(kv["speedup_x"])

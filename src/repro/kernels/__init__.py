@@ -1,3 +1,16 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel packages + the shared kernel registry.
+
+Each kernel package (``fused_mlp``, ``flash_attention``,
+``stencil_gather``, ``rwkv6_chunk``) ships ``<name>.py`` (the Pallas
+kernel), ``ref.py`` (the jnp oracle), and ``ops.py`` (a thin shim that
+registers a :class:`repro.kernels.registry.KernelSpec` and dispatches
+through :func:`repro.kernels.registry.dispatch`).  See
+``src/repro/tune/README.md`` for the KernelSpec contract and how the
+autotuner sweeps registered kernels.
+"""
+from repro.kernels.registry import (KernelSpec, TunableParam, all_specs,
+                                    device_vmem_budget, dispatch,
+                                    ensure_builtin_specs, get_spec, register)
+
+__all__ = ["KernelSpec", "TunableParam", "all_specs", "device_vmem_budget",
+           "dispatch", "ensure_builtin_specs", "get_spec", "register"]

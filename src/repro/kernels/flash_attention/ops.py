@@ -1,20 +1,118 @@
-"""jit'd wrapper: Pallas flash kernel on TPU, oracle elsewhere."""
+"""Registry shim + spec for the Pallas flash-attention kernel.
+
+Tunables: ``block_q`` (query rows per grid step) and ``block_kv`` (the
+kv-loop chunk).  Validation tolerance is declared rather than bit-exact:
+the online-softmax rescaling order changes with the block structure, so
+two block_kv choices legitimately round differently — candidates must
+match the naive-softmax oracle to f32 tolerance instead.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
+from repro.kernels import registry
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 
+_BLOCK_LADDER = (16, 32, 64, 128, 256)
+_DEFAULT_BLOCK = 128
 
+
+# ----------------------------------------------------------- KernelSpec ----
+def _inspect(q, k, v, *, causal=True, q_offset=0):
+    B, Sq, H, hd = q.shape
+    problem = {"b": int(B), "sq": int(Sq), "skv": int(k.shape[1]),
+               "h": int(H), "kv": int(k.shape[2]), "hd": int(hd),
+               "causal": bool(causal), "q_offset": int(q_offset),
+               "dtype": str(np.dtype(q.dtype))}
+    return problem, (q, k, v)
+
+
+def _run(problem, arrays, params, *, interpret):
+    q, k, v = arrays
+    return flash_attention(q, k, v, causal=problem["causal"],
+                           q_offset=problem["q_offset"],
+                           block_q=params["block_q"],
+                           block_k=params["block_kv"], interpret=interpret)
+
+
+def _ref(problem, arrays):
+    q, k, v = arrays
+    return flash_attention_ref(q, k, v, causal=problem["causal"],
+                               q_offset=problem["q_offset"])
+
+
+def _make(problem, rng):
+    def t(*shape):
+        return jnp.asarray(rng.normal(size=shape).astype(np.float32),
+                           problem["dtype"])
+    q = t(problem["b"], problem["sq"], problem["h"], problem["hd"])
+    k = t(problem["b"], problem["skv"], problem["kv"], problem["hd"])
+    v = t(problem["b"], problem["skv"], problem["kv"], problem["hd"])
+    return (q, k, v)
+
+
+def _key(problem, backend):
+    p = problem
+    shape = (f"b{p['b']}-sq{p['sq']}-skv{p['skv']}-h{p['h']}-kv{p['kv']}-"
+             f"hd{p['hd']}-c{int(p['causal'])}")
+    return f"{shape}|{p['dtype']}|{backend}"
+
+
+def _fits(problem, params, budget=None):
+    """One grid step holds a q block, the kv head's full (padded) K/V,
+    the score block, and the running (acc, m, l) — all f32 compute."""
+    if budget is None:
+        budget = registry.device_vmem_budget()
+    bq, bk = params["block_q"], params["block_kv"]
+    hd = problem["hd"]
+    skv_p = registry.round_up(problem["skv"], bk)
+    t = registry.tile_bytes
+    resident = (2 * t(bq, hd)            # q block, double-buffered
+                + 2 * 2 * t(skv_p, hd)   # K and V, double-buffered
+                + t(bq, bk)              # score block
+                + t(bq, hd)              # acc
+                + 2 * t(bq, 1)           # m, l (lane-padded)
+                + 2 * t(bq, hd))         # out block, double-buffered
+    return resident <= budget
+
+
+def _cands(problem):
+    clip = {"block_q": registry.round_up(problem["sq"], 16),
+            "block_kv": registry.round_up(problem["skv"], 16)}
+    return registry.ladder_candidates(
+        SPEC.params, clip, fits=lambda c: _fits(problem, c))
+
+
+SPEC = registry.register(registry.KernelSpec(
+    name="flash_attention",
+    params=(registry.TunableParam("block_q", _DEFAULT_BLOCK, _BLOCK_LADDER),
+            registry.TunableParam("block_kv", _DEFAULT_BLOCK, _BLOCK_LADDER)),
+    inspect=_inspect, run_call=_run, ref_call=_ref, make_call=_make,
+    cache_key=_key, candidates=_cands, fits=_fits,
+    tol=(2e-5, 2e-5),
+    default_problems=(
+        # prefill-shaped: square causal attention, GQA group of 4
+        {"b": 1, "sq": 256, "skv": 256, "h": 8, "kv": 2, "hd": 64,
+         "causal": True, "q_offset": 0, "dtype": "float32"},
+        # decode-window-shaped: short q against a long kv
+        {"b": 4, "sq": 32, "skv": 512, "h": 8, "kv": 2, "hd": 64,
+         "causal": True, "q_offset": 480, "dtype": "float32"},
+    )))
+
+
+# ------------------------------------------------------------------ ops ----
 @functools.partial(jax.jit, static_argnames=("causal", "q_offset",
-                                             "force_kernel"))
+                                             "force_kernel", "block_q",
+                                             "block_kv"))
 def flash_attention_op(q, k, v, *, causal=True, q_offset=0,
-                       force_kernel=False):
-    on_tpu = jax.default_backend() == "tpu"
-    if force_kernel or on_tpu:
-        return flash_attention(q, k, v, causal=causal, q_offset=q_offset,
-                               interpret=not on_tpu)
-    return flash_attention_ref(q, k, v, causal=causal, q_offset=q_offset)
+                       force_kernel=False, block_q=None, block_kv=None):
+    problem, arrays = _inspect(q, k, v, causal=causal, q_offset=q_offset)
+    return registry.dispatch(SPEC, problem, arrays,
+                             force_kernel=force_kernel,
+                             overrides={"block_q": block_q,
+                                        "block_kv": block_kv})

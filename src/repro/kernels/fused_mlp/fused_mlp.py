@@ -8,7 +8,9 @@ with no intermediate HBM traffic — the TPU-native reading of the paper's
 Observation 2 (surrogates win by raising hardware utilization).
 
 VMEM budget: sum(W_l) + 2 * batch_tile * max_width * 4B must stay under
-~12 MB; ``fits_vmem`` guards this and ops.py falls back to the jnp path.
+the device's VMEM budget (queried per device kind, 12 MiB off-TPU);
+``fits_vmem`` guards this and the registry dispatch falls back to the
+jnp path.
 """
 from __future__ import annotations
 
@@ -41,11 +43,7 @@ def _kernel(*refs, n_layers, acts):
     o_ref[...] = h.astype(o_ref.dtype)
 
 
-def _round_up(n: int, m: int) -> int:
-    return n + (-n % m)
-
-
-def fits_vmem(widths, batch_tile=128, budget=12 * 2 ** 20, dtype_bytes=4):
+def fits_vmem(widths, batch_tile=128, budget=None, dtype_bytes=4):
     """Exact VMEM accounting for one grid step of the fused kernel.
 
     VMEM tiles are padded to the TPU register layout — (8, 128) sublane x
@@ -55,14 +53,17 @@ def fits_vmem(widths, batch_tile=128, budget=12 * 2 ** 20, dtype_bytes=4):
     predicate to reject configs that would overflow, so it must account
     every resident byte: weights + biases + input/output activation
     tiles (double-buffered pipeline: 2x each).
+
+    ``budget=None`` queries the actual device's VMEM via the backend
+    (:func:`repro.kernels.registry.device_vmem_budget`; 12 MiB off-TPU).
     """
-    sublane = max(8 * 4 // dtype_bytes, 8)  # f32: 8, bf16: 16
-    wbytes = sum(_round_up(a, sublane) * _round_up(b, 128) * dtype_bytes
+    from repro.kernels.registry import device_vmem_budget, tile_bytes
+    if budget is None:
+        budget = device_vmem_budget()
+    wbytes = sum(tile_bytes(a, b, dtype_bytes)
                  for a, b in zip(widths[:-1], widths[1:]))
-    bbytes = sum(sublane * _round_up(b, 128) * dtype_bytes
-                 for b in widths[1:])
-    tile_rows = _round_up(batch_tile, sublane)
-    abytes = 2 * 2 * tile_rows * _round_up(max(widths), 128) * dtype_bytes
+    bbytes = sum(tile_bytes(1, b, dtype_bytes) for b in widths[1:])
+    abytes = 2 * 2 * tile_bytes(batch_tile, max(widths), dtype_bytes)
     return wbytes + bbytes + abytes <= budget
 
 

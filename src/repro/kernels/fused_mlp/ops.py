@@ -1,40 +1,122 @@
-"""jit'd wrapper + spec adapter for the inference engine."""
+"""Registry shim + spec adapter for the fused-MLP inference kernel.
+
+Backend dispatch (on-TPU / ``force_kernel`` / interpret fallback) and
+tuned-parameter resolution live in :mod:`repro.kernels.registry`; this
+module only declares the kernel's :class:`KernelSpec` — how to derive a
+problem from a call, synthesize sweep inputs, key the tune cache, and
+cost VMEM — plus the shard_map wrapper and the engine's spec adapter.
+"""
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.kernels import registry
 from repro.kernels.fused_mlp.fused_mlp import fits_vmem, fused_mlp
 from repro.kernels.fused_mlp.ref import fused_mlp_ref
 
-
-def _tile_for(widths, x, batch_tile):
-    """Resolve the batch tile: explicit arg > tuned cache > default 128.
-
-    The cache lookup happens at trace time (x.shape is static inside the
-    engine's jit), so serving pays one dict probe per compiled shape,
-    not per call.  Tuned tiles are re-checked against ``fits_vmem`` —
-    a cache written on a machine with a bigger VMEM budget must not
-    push this one over.
-    """
-    if batch_tile is None:
-        from repro.tune.cache import best_tile
-        batch_tile = best_tile(widths, x.dtype, jax.default_backend(),
-                               int(x.shape[0]))
-    if batch_tile is None or not fits_vmem(widths, batch_tile):
-        batch_tile = 128
-    return batch_tile
+DEFAULT_TILE = 128
+_TILE_LADDER = (16, 32, 64, 128, 256, 512)
 
 
+# ----------------------------------------------------------- KernelSpec ----
+def _inspect(x, weights, biases, acts):
+    widths = (int(weights[0].shape[0]),) + tuple(int(w.shape[1])
+                                                 for w in weights)
+    problem = {"widths": widths, "acts": tuple(acts),
+               "batch": int(x.shape[0]), "dtype": str(np.dtype(x.dtype))}
+    return problem, (x, tuple(weights), tuple(biases))
+
+
+def _run(problem, arrays, params, *, interpret):
+    x, ws, bs = arrays
+    return fused_mlp(x, list(ws), list(bs), problem["acts"],
+                     batch_tile=params["batch_tile"], interpret=interpret)
+
+
+def _ref(problem, arrays):
+    x, ws, bs = arrays
+    return fused_mlp_ref(x, list(ws), list(bs), problem["acts"])
+
+
+def _make(problem, rng):
+    widths, dtype = problem["widths"], problem["dtype"]
+    ws = tuple(jnp.asarray(rng.normal(size=(a, b)).astype(np.float32) * 0.3,
+                           dtype) for a, b in zip(widths[:-1], widths[1:]))
+    bs = tuple(jnp.asarray(rng.normal(size=(b,)).astype(np.float32) * 0.1,
+                           dtype) for b in widths[1:])
+    x = jnp.asarray(rng.normal(size=(problem["batch"], widths[0]))
+                    .astype(np.float32), dtype)
+    return (x, ws, bs)
+
+
+def _key(problem, backend):
+    from repro.tune.cache import shape_key
+    return shape_key(problem["widths"], problem["dtype"], backend,
+                     problem["batch"])
+
+
+def _keys(problem, backend):
+    """Exact batch first (serve-path dispatches and per-shard shard_map
+    batches arrive bucket-shaped, including non-pow2 shard-rounded
+    buckets), then the power-of-two bucket covering eager calls."""
+    from repro.serve.batcher import bucket_size
+    from repro.tune.cache import shape_key
+    b = problem["batch"]
+    return [shape_key(problem["widths"], problem["dtype"], backend, bb)
+            for bb in dict.fromkeys((b, bucket_size(b)))]
+
+
+def candidate_tiles(widths, bucket, extra=()):
+    """Tiles worth sweeping for one bucket: the standard ladder clipped
+    to the bucket, the bucket itself (grid of 1), and any extras —
+    deduped, VMEM-checked, default first so ties keep the default.
+    (The single source for the fused_mlp candidate set; the tuner and
+    the spec both consume it.)"""
+    tiles = [DEFAULT_TILE]
+    for t in _TILE_LADDER + (int(bucket),) + tuple(extra):
+        t = int(t)
+        if 0 < t <= bucket and t not in tiles:
+            tiles.append(t)
+    return [t for t in tiles if fits_vmem(widths, t)]
+
+
+def _cands(problem):
+    return [{"batch_tile": t}
+            for t in candidate_tiles(problem["widths"], problem["batch"])]
+
+
+def _fits(problem, params, budget=None):
+    return fits_vmem(problem["widths"], params["batch_tile"], budget=budget)
+
+
+def _supports(problem):
+    return fits_vmem(problem["widths"])
+
+
+SPEC = registry.register(registry.KernelSpec(
+    name="fused_mlp",
+    params=(registry.TunableParam("batch_tile", DEFAULT_TILE, _TILE_LADDER),),
+    inspect=_inspect, run_call=_run, ref_call=_ref, make_call=_make,
+    cache_key=_key, cache_keys=_keys, candidates=_cands, fits=_fits,
+    supports=_supports, tol=None,
+    default_problems=(
+        {"widths": (5, 128, 128, 1), "acts": ("relu", "relu", "identity"),
+         "batch": 256, "dtype": "float32"},
+        {"widths": (16, 256, 256, 4), "acts": ("relu", "relu", "identity"),
+         "batch": 512, "dtype": "float32"},
+    )))
+
+
+# ------------------------------------------------------------------ ops ----
 def fused_mlp_op(x, weights, biases, acts, *, force_kernel=False,
                  batch_tile=None):
-    widths = [weights[0].shape[0]] + [w.shape[1] for w in weights]
-    on_tpu = jax.default_backend() == "tpu"
-    if (force_kernel or on_tpu) and fits_vmem(widths):
-        tile = _tile_for(widths, x, batch_tile)
-        return fused_mlp(x, weights, biases, acts, batch_tile=tile,
-                         interpret=not on_tpu)
-    return fused_mlp_ref(x, weights, biases, acts)
+    problem, arrays = _inspect(x, weights, biases, acts)
+    return registry.dispatch(SPEC, problem, arrays,
+                             force_kernel=force_kernel,
+                             overrides={"batch_tile": batch_tile})
 
 
 def fused_mlp_sharded(x, weights, biases, acts, *, mesh, data_axes,
@@ -79,7 +161,6 @@ def fused_mlp_from_spec(spec, params, x, *, mesh=None, data_axes=()):
     denses become the per-layer act, trailing dense gets 'identity'.
     """
     weights, biases, acts = [], [], []
-    import jax.numpy as jnp
     pending_w = None
     for layer_spec, p in zip(spec["layers"], params):
         if layer_spec["kind"] == "dense":

@@ -1,14 +1,71 @@
-"""jit'd wrapper: Pallas kernel on TPU, sequential oracle elsewhere."""
+"""Registry shim + spec for the RWKV6 WKV chunk-scan kernel.
+
+No tunable parameters: the grid is (batch, head) and the time loop runs
+inside the kernel, so there is no tile ladder to sweep — the registry
+still owns the backend dispatch (and the parity suite still validates
+the kernel against its sequential oracle like every other spec).
+"""
 from __future__ import annotations
 
-import jax
+import jax.numpy as jnp
+import numpy as np
 
+from repro.kernels import registry
 from repro.kernels.rwkv6_chunk.ref import rwkv6_chunk_ref
 from repro.kernels.rwkv6_chunk.rwkv6_chunk import rwkv6_chunk
 
 
+# ----------------------------------------------------------- KernelSpec ----
+def _inspect(r, k, v, w, u, s0):
+    B, T, H, hd = r.shape
+    problem = {"b": int(B), "t": int(T), "h": int(H), "hd": int(hd),
+               "dtype": str(np.dtype(r.dtype))}
+    return problem, (r, k, v, w, u, s0)
+
+
+def _run(problem, arrays, params, *, interpret):
+    del params  # no tunables
+    return rwkv6_chunk(*arrays, interpret=interpret)
+
+
+def _ref(problem, arrays):
+    return rwkv6_chunk_ref(*arrays)
+
+
+def _make(problem, rng):
+    B, T, H, hd = problem["b"], problem["t"], problem["h"], problem["hd"]
+    dt = problem["dtype"]
+
+    def t(*shape, lo=None, hi=None):
+        a = (rng.uniform(lo, hi, shape) if lo is not None
+             else rng.normal(size=shape)).astype(np.float32)
+        return jnp.asarray(a, dt)
+    r, k, v = t(B, T, H, hd), t(B, T, H, hd), t(B, T, H, hd)
+    w = t(B, T, H, hd, lo=0.7, hi=0.999)
+    u = t(H, hd)
+    s0 = t(B, H, hd, hd) * 0.1
+    return (r, k, v, w, u, s0)
+
+
+def _key(problem, backend):
+    p = problem
+    return (f"b{p['b']}-t{p['t']}-h{p['h']}-hd{p['hd']}"
+            f"|{p['dtype']}|{backend}")
+
+
+SPEC = registry.register(registry.KernelSpec(
+    name="rwkv6_chunk",
+    params=(),
+    inspect=_inspect, run_call=_run, ref_call=_ref, make_call=_make,
+    cache_key=_key, candidates=lambda problem: [{}],
+    tol=(1e-5, 1e-5),
+    default_problems=(
+        {"b": 2, "t": 64, "h": 2, "hd": 16, "dtype": "float32"},
+    )))
+
+
+# ------------------------------------------------------------------ ops ----
 def rwkv6_chunk_op(r, k, v, w, u, s0, *, force_kernel=False):
-    on_tpu = jax.default_backend() == "tpu"
-    if force_kernel or on_tpu:
-        return rwkv6_chunk(r, k, v, w, u, s0, interpret=not on_tpu)
-    return rwkv6_chunk_ref(r, k, v, w, u, s0)
+    problem, arrays = _inspect(r, k, v, w, u, s0)
+    return registry.dispatch(SPEC, problem, arrays,
+                             force_kernel=force_kernel)

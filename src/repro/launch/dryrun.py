@@ -219,21 +219,39 @@ def run_smoke(outdir: pathlib.Path, force: bool = False) -> dict:
     return rec
 
 
-def run_tune(bundle=None, buckets=(64, 256, 1024), force=False):
-    """Pre-populate the fused_mlp autotune cache (artifacts/tune).
+def run_tune(bundle=None, buckets=(64, 256, 1024), force=False,
+             kernels="all"):
+    """Pre-populate the kernel autotune caches (artifacts/tune/<kernel>.json).
 
-    The serve path consults the cache at trace time
-    (``fused_mlp_op`` -> ``repro.tune.cache.best_tile``); running this
-    at deploy — per surrogate bundle, or over the NAS-representative
-    default shapes — means the first real mega-batch already runs the
-    measured-best batch tile instead of the hardcoded default.
+    The registry dispatch consults the kernel-namespaced caches at trace
+    time (``repro.kernels.registry.dispatch`` ->
+    ``repro.tune.cache.best_params``); running this at deploy — per
+    surrogate bundle for fused_mlp, plus every registered kernel's
+    representative problems (flash_attention block sizes, stencil_gather
+    tiles) — means the first real dispatch already runs the
+    measured-best config instead of the hardcoded defaults.
     """
-    from repro.tune import autotune
-    targets = [bundle] if bundle else [[5, 128, 128, 1], [16, 256, 256, 4]]
-    for t in targets:
-        recs = autotune(t, list(buckets), force=force, verbose=True)
-        wins = sum(1 for r in recs if r["exact"])
-        print(f"[tune] {t}: {wins}/{len(recs)} buckets tuned", flush=True)
+    from repro.tune import autotune, autotune_registered
+    names = None if kernels in ("all", None) else \
+        [k.strip() for k in kernels.split(",") if k.strip()]
+    if names is None or "fused_mlp" in names:
+        targets = [bundle] if bundle else [[5, 128, 128, 1],
+                                           [16, 256, 256, 4]]
+        for t in targets:
+            recs = autotune(t, list(buckets), force=force, verbose=True)
+            wins = sum(1 for r in recs if r["exact"])
+            print(f"[tune] fused_mlp {t}: {wins}/{len(recs)} buckets tuned",
+                  flush=True)
+        if names is not None:
+            names = [k for k in names if k != "fused_mlp"]
+            if not names:
+                return
+    else:
+        names = names or []
+    recs = autotune_registered(names, force=force, verbose=True)
+    wins = sum(1 for r in recs if r["exact"])
+    print(f"[tune] registered kernels: {wins}/{len(recs)} problems tuned",
+          flush=True)
 
 
 def main():
@@ -252,6 +270,9 @@ def main():
                          "the NAS-representative defaults")
     ap.add_argument("--tune-buckets", default="64,256,1024",
                     help="--tune: comma-separated batch buckets to sweep")
+    ap.add_argument("--tune-kernels", default="all",
+                    help="--tune: comma-separated registered kernels to "
+                         "pre-populate (default: all)")
     ap.add_argument("--out", default=str(ARTIFACTS))
     args = ap.parse_args()
     outdir = pathlib.Path(args.out)
@@ -259,7 +280,7 @@ def main():
     if args.tune:
         run_tune(args.tune_bundle,
                  [int(b) for b in args.tune_buckets.split(",")],
-                 force=args.force)
+                 force=args.force, kernels=args.tune_kernels)
         return
 
     if args.smoke:

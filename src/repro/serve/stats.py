@@ -20,7 +20,7 @@ from __future__ import annotations
 import threading
 import time
 from collections import Counter, deque
-from typing import Deque, Dict, Tuple
+from typing import Deque, Dict, Optional, Tuple
 
 
 def _percentile(sorted_vals, q: float) -> float:
@@ -35,6 +35,12 @@ def _percentile(sorted_vals, q: float) -> float:
 
 class ServeStats:
     """Counters for one serving key; thread-safe; cheap to snapshot."""
+
+    #: EWMA weight for per-bucket batch-latency observations — high
+    #: enough to track a drifting service time within a few batches,
+    #: low enough that one noisy dispatch doesn't whipsaw the
+    #: controller's deadline.
+    BATCH_LATENCY_ALPHA = 0.25
 
     def __init__(self, key: str, latency_window: int = 2048):
         self.key = key
@@ -57,6 +63,13 @@ class ServeStats:
         # (monotonic time, rows) of recent submits: the adaptive flush
         # controller reads the observed arrival rate from this window
         self._arrivals: Deque[Tuple[float, int]] = deque(maxlen=256)
+        # bucket -> [ewma_busy_s, n_batches]: measured wall time of one
+        # dispatched batch per bucket size.  The adaptive flush
+        # controller blends these back into its latency model (measured
+        # wins once warm; the roofline prediction is the cold-start
+        # prior).  Failed dispatches never land here — an exception path
+        # timing says nothing about healthy service time.
+        self._bucket_lat: Dict[int, list] = {}
 
     # ------------------------------------------------------------ hooks ---
     def on_enqueue(self, rows: int) -> None:
@@ -97,6 +110,36 @@ class ServeStats:
             self.flush_reasons[reason] += 1
             self.busy_s += busy_s
             self._lat.extend(latencies_s)
+            ewma = self._bucket_lat.get(bucket)
+            if ewma is None:
+                self._bucket_lat[bucket] = [float(busy_s), 1]
+            elif ewma[1] == 1:
+                # the first dispatch of a bucket pays its one-time jit
+                # compile; blending it in would leave the EWMA orders of
+                # magnitude high for dozens of batches, so the second
+                # observation replaces it outright
+                ewma[0] = float(busy_s)
+                ewma[1] = 2
+            else:
+                ewma[0] += self.BATCH_LATENCY_ALPHA * (busy_s - ewma[0])
+                ewma[1] += 1
+
+    def batch_latency_s(self, bucket: int,
+                        min_batches: int = 1) -> Optional[float]:
+        """Measured EWMA wall time of one dispatched batch of ``bucket``
+        rows, or None until at least ``min_batches`` batches of that
+        bucket have completed (callers treat None as "cold: use the
+        model prior")."""
+        with self._lock:
+            ewma = self._bucket_lat.get(int(bucket))
+            if ewma is None or ewma[1] < min_batches:
+                return None
+            return ewma[0]
+
+    def batch_latencies(self) -> Dict[int, Tuple[float, int]]:
+        """Snapshot of every bucket's (ewma_s, n_batches)."""
+        with self._lock:
+            return {b: (e[0], e[1]) for b, e in self._bucket_lat.items()}
 
     def arrival_rate_rows_s(self, now: float = None) -> float:
         """Observed submit rate (rows/s) over the recent arrival window.
@@ -137,6 +180,11 @@ class ServeStats:
                 "latency_p99_ms": _percentile(lat, 0.99) * 1e3,
                 "rows_per_s": rows_per_s,
                 "arrival_rate_rows_s": self._arrival_rate_locked(),
+                "batch_latency_ewma_ms": {
+                    b: round(e[0] * 1e3, 4)
+                    for b, e in sorted(self._bucket_lat.items())},
+                "batch_latency_batches": {
+                    b: e[1] for b, e in sorted(self._bucket_lat.items())},
             }
 
     def _arrival_rate_locked(self, now: float = None) -> float:

@@ -2,22 +2,28 @@
 
 Two closed loops (see README.md):
 
-  * **kernel tuning** — sweep ``fused_mlp`` batch tiles over the shapes
-    the engine serves, validate against the ref oracle, persist winners
-    (``kernel_tuner`` + ``cache``); the kernel op consults the cache
-    instead of its hardcoded default.
+  * **kernel tuning** — every Pallas kernel registers a
+    :class:`repro.kernels.registry.KernelSpec`; ``sweep`` measures its
+    candidate ladder over the shapes the engine serves, validates
+    against the ref oracle, and persists winners per kernel
+    (``kernel_tuner`` + ``cache``); the registry dispatch consults the
+    cache instead of hardcoded defaults.
   * **flush control** — pick the serve queue's deadline and batch
-    target from the observed arrival rate and the roofline-predicted
-    batch latency (``controller``), degrading to the static policy
-    while stats are cold.
+    target from the observed arrival rate and the batch-latency model
+    (``controller``): measured per-bucket ``ServeStats`` latencies once
+    warm, the roofline prediction as the cold-start prior, degrading to
+    the static policy while stats are cold.
 """
-from repro.tune.cache import TuneCache, best_tile, default_cache, shape_key
+from repro.tune.cache import (TuneCache, best_params, best_tile,
+                              default_cache, shape_key)
 from repro.tune.controller import (AdaptiveFlushController, mlp_resources,
                                    predict_batch_latency_s)
-from repro.tune.kernel_tuner import (autotune, candidate_tiles, serve_buckets,
+from repro.tune.kernel_tuner import (autotune, autotune_registered,
+                                     candidate_tiles, serve_buckets, sweep,
                                      sweep_fused_mlp, widths_from_spec)
 
-__all__ = ["AdaptiveFlushController", "TuneCache", "autotune", "best_tile",
+__all__ = ["AdaptiveFlushController", "TuneCache", "autotune",
+           "autotune_registered", "best_params", "best_tile",
            "candidate_tiles", "default_cache", "mlp_resources",
            "predict_batch_latency_s", "serve_buckets", "shape_key",
-           "sweep_fused_mlp", "widths_from_spec"]
+           "sweep", "sweep_fused_mlp", "widths_from_spec"]

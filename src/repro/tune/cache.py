@@ -1,22 +1,33 @@
-"""On-disk autotune cache: measured kernel configs keyed by served shape.
+"""On-disk autotune cache: measured kernel configs, kernel-namespaced.
 
-One JSON file per kernel under ``artifacts/tune/`` (e.g.
-``fused_mlp.json``) maps a shape key to the measured winner:
+One JSON file per registered kernel under ``artifacts/tune/``
+(``fused_mlp.json``, ``flash_attention.json``, ``stencil_gather.json``,
+...), schema 2:
 
-    key:    "<w0-w1-...-wn>|<dtype>|<backend>|b<bucket>"
-    record: {"batch_tile": int, "us": float, "default_us": float,
-             "speedup_x": float, "exact": bool, "swept": [...]}
+    {"schema": 2, "kernel": "<name>", "entries": {key: record}}
 
-The *bucket* is the serve-path batch bucket (power of two — the only
-batch shapes the engine's ``apply_batched`` ever dispatches), so eager
-calls of any size hit the same entry their padded bucket would.
+Keys are kernel-defined problem strings (``KernelSpec.cache_key``; for
+fused_mlp the historical ``"<w0-w1-...>|<dtype>|<backend>|b<bucket>"``
+format is preserved).  Records carry the measured winner:
 
-Lookups sit on the trace-time hot path (``fused_mlp_op`` consults the
-cache while the engine's apply is being traced), so the file is parsed
-once and memoized; an mtime fingerprint re-reads it when another
-process (``tune.autotune`` warm-up, ``dryrun --tune``) rewrites it.
-Writes are atomic (tmp + rename) so a crashed sweep never leaves a
-torn file behind.
+    {"params": {"batch_tile": 64}, "us": float, "default_us": float,
+     "speedup_x": float, "exact": bool, "swept": [...]}
+
+plus — for fused_mlp back-compat — the winner's params flattened at the
+top level (``"batch_tile": 64``).
+
+**Migration:** schema-1 files were a flat ``{key: record}`` dict with no
+envelope and per-record ``batch_tile`` instead of ``params``.  The first
+load of a legacy file lifts it into the schema-2 layout (adding
+``params`` to each record) and rewrites the file atomically, so deployed
+caches and the CI ``actions/cache`` entry survive the registry refactor;
+a read-only filesystem just keeps serving the migrated view from memory.
+
+Lookups sit on the trace-time hot path (the registry dispatch consults
+the cache while the engine's apply is being traced), so the file is
+parsed once and memoized; an mtime fingerprint re-reads it when another
+process (``tune.sweep`` warm-up, ``dryrun --tune``) rewrites it.  Writes
+are atomic (tmp + rename) so a crashed sweep never leaves a torn file.
 """
 from __future__ import annotations
 
@@ -25,11 +36,13 @@ import os
 import pathlib
 import tempfile
 import threading
-from typing import Dict, Iterable, Optional
+from typing import Dict, Iterable, Optional, Sequence
 
 import numpy as np
 
 ART = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "tune"
+
+SCHEMA = 2
 
 
 def _dtype_name(dtype) -> str:
@@ -44,8 +57,17 @@ def _dtype_name(dtype) -> str:
 
 
 def shape_key(widths: Iterable[int], dtype, backend: str, bucket: int) -> str:
+    """The fused_mlp cache key (kept byte-identical to the schema-1
+    format so legacy entries keep hitting after migration)."""
     w = "-".join(str(int(v)) for v in widths)
     return f"{w}|{_dtype_name(dtype)}|{backend}|b{int(bucket)}"
+
+
+def _migrate_record(rec: dict) -> dict:
+    """Schema-1 records carried the winner as a bare ``batch_tile``."""
+    if isinstance(rec, dict) and "params" not in rec and "batch_tile" in rec:
+        rec = dict(rec, params={"batch_tile": rec["batch_tile"]})
+    return rec
 
 
 class TuneCache:
@@ -77,10 +99,25 @@ class TuneCache:
             return
         try:
             data = json.loads(self.path.read_text())
-            self._mem = data if isinstance(data, dict) else {}
         except (OSError, ValueError):
             # a torn/corrupt cache is a cache miss, never a crash
             self._mem = {}
+            return
+        if not isinstance(data, dict):
+            self._mem = {}
+            return
+        if data.get("schema") == SCHEMA:
+            ent = data.get("entries")
+            self._mem = ent if isinstance(ent, dict) else {}
+            return
+        # schema-1 legacy: a flat {key: record} dict — lift it into the
+        # namespaced layout and persist the migration atomically
+        self._mem = {k: _migrate_record(v) for k, v in data.items()
+                     if isinstance(v, dict)}
+        try:
+            self._save_locked()
+        except OSError:
+            pass  # read-only checkout: serve the migrated view from memory
 
     def _save_locked(self) -> None:
         self.path.parent.mkdir(parents=True, exist_ok=True)
@@ -88,7 +125,9 @@ class TuneCache:
                                    prefix=self.path.name, suffix=".tmp")
         try:
             with os.fdopen(fd, "w") as f:
-                json.dump(self._mem, f, indent=1, sort_keys=True)
+                json.dump({"schema": SCHEMA, "kernel": self.kernel,
+                           "entries": self._mem}, f, indent=1,
+                          sort_keys=True)
             os.replace(tmp, self.path)
         except BaseException:
             try:
@@ -99,18 +138,26 @@ class TuneCache:
         self._fingerprint = self._file_fingerprint()
 
     # -------------------------------------------------------------- api ---
-    def lookup(self, widths, dtype, backend: str,
-               bucket: int) -> Optional[dict]:
+    def get(self, key: str) -> Optional[dict]:
+        """Record for a kernel-defined cache key, or None."""
         with self._lock:
             self._refresh_locked()
-            return self._mem.get(shape_key(widths, dtype, backend, bucket))
+            return self._mem.get(key)
+
+    def put(self, key: str, record: dict) -> None:
+        with self._lock:
+            self._refresh_locked()  # merge with concurrent writers' entries
+            self._mem[key] = record
+            self._save_locked()
+
+    def lookup(self, widths, dtype, backend: str,
+               bucket: int) -> Optional[dict]:
+        """fused_mlp-shaped convenience lookup (legacy API)."""
+        return self.get(shape_key(widths, dtype, backend, bucket))
 
     def store(self, widths, dtype, backend: str, bucket: int,
               record: dict) -> None:
-        with self._lock:
-            self._refresh_locked()  # merge with concurrent writers' entries
-            self._mem[shape_key(widths, dtype, backend, bucket)] = record
-            self._save_locked()
+        self.put(shape_key(widths, dtype, backend, bucket), record)
 
     def entries(self) -> Dict[str, dict]:
         with self._lock:
@@ -125,7 +172,7 @@ class TuneCache:
             self._fingerprint = None
 
 
-# process-wide default cache (what the serving hot path consults)
+# process-wide default caches (what the serving hot path consults)
 _default: Dict[str, TuneCache] = {}
 _default_lock = threading.Lock()
 
@@ -138,6 +185,37 @@ def default_cache(kernel: str = "fused_mlp") -> TuneCache:
         return c
 
 
+def _record_params(rec: Optional[dict]) -> Optional[Dict[str, int]]:
+    """Validated winner params of a record, or None.
+
+    Only validated winners are served — the kernel must never pick up a
+    config that failed the oracle check.  Schema-1 records that reached
+    memory without migration still resolve via ``batch_tile``.
+    """
+    if rec is None or not rec.get("exact", False):
+        return None
+    params = rec.get("params")
+    if params is None and "batch_tile" in rec:
+        params = {"batch_tile": rec["batch_tile"]}
+    if not isinstance(params, dict) or not params:
+        return None
+    try:
+        return {k: int(v) for k, v in params.items()}
+    except (TypeError, ValueError):
+        return None
+
+
+def best_params(kernel: str, keys: Sequence[str]) -> Optional[Dict[str, int]]:
+    """First validated winner along ``keys`` (ordered lookup fallbacks,
+    e.g. fused_mlp's exact-batch-then-pow2-bucket chain), or None."""
+    cache = default_cache(kernel)
+    for key in keys:
+        params = _record_params(cache.get(key))
+        if params is not None:
+            return params
+    return None
+
+
 def best_tile(widths, dtype, backend: str, batch: int) -> Optional[int]:
     """Tuned ``batch_tile`` for a fused_mlp call, or None when untuned.
 
@@ -145,19 +223,14 @@ def best_tile(widths, dtype, backend: str, batch: int) -> Optional[int]:
     per-shard batches inside ``fused_mlp_sharded``) arrive already
     bucket-shaped, including the non-power-of-two buckets a shard-count
     rounding produces — then the power-of-two bucket, which covers
-    eager calls of arbitrary size.  Only validated winners are
-    returned — the kernel must never pick up a tile that failed the
-    exactness check against ref.py.
+    eager calls of arbitrary size.
     """
     from repro.serve.batcher import bucket_size
-    cache = default_cache()
     batch = int(batch)
-    rec = None
-    for bucket in dict.fromkeys((batch, bucket_size(batch))):
-        rec = cache.lookup(widths, dtype, backend, bucket)
-        if rec is not None:
-            break
-    if rec is None or not rec.get("exact", False):
+    keys = [shape_key(widths, dtype, backend, b)
+            for b in dict.fromkeys((batch, bucket_size(batch)))]
+    params = best_params("fused_mlp", keys)
+    if params is None:
         return None
-    tile = int(rec["batch_tile"])
-    return tile if tile > 0 else None
+    tile = params.get("batch_tile")
+    return int(tile) if tile and tile > 0 else None

@@ -1,21 +1,26 @@
-"""Measurement-driven batch-tile autotuning for the fused_mlp kernel.
+"""Measurement-driven autotuning for every registered Pallas kernel.
 
-``fused_mlp`` tiles the batch over the Pallas grid with a hardcoded 128
-unless told otherwise; the right tile depends on the net's widths, the
-dtype, and the batch bucket the serve path actually dispatches.  This
-module sweeps the candidate tiles that fit VMEM (``fits_vmem`` — exact
-accounting, see fused_mlp.py), validates every candidate bit-for-bit
-against the ``ref.py`` oracle, and persists winners in the on-disk
-:class:`repro.tune.cache.TuneCache` that ``fused_mlp_op`` consults.
+Each kernel declares its tunables via a
+:class:`repro.kernels.registry.KernelSpec` (candidate ladders, VMEM cost
+model, jitted ref oracle); :func:`sweep` measures every candidate that
+fits the device's VMEM budget, validates each against the oracle
+(bit-for-bit where the spec declares ``tol=None`` — fused_mlp,
+stencil_gather — or to the spec's tolerance where the block structure
+legitimately changes rounding, e.g. flash attention's online softmax),
+and persists winners in the kernel-namespaced on-disk
+:class:`repro.tune.cache.TuneCache` the registry dispatch consults at
+trace time.
 
 Entry points:
 
-  * :func:`sweep_fused_mlp` — one (widths, bucket) cell: measure, pick,
-    store.
+  * :func:`sweep` — one (kernel, problem) cell: measure, pick, store.
+  * :func:`sweep_fused_mlp` — the historical fused_mlp-shaped wrapper.
   * :func:`autotune` — warm-up over the shapes an engine bundle serves
     (the buckets ``InferenceEngine.apply_batched`` can produce), or over
     explicit widths.  Call it once at deploy; the cache makes it free
     afterwards.
+  * :func:`autotune_registered` — pre-populate every registered kernel's
+    representative problems (what ``dryrun --tune`` runs at deploy).
 
 Measurements run whatever path the op would take on this backend: the
 compiled Pallas kernel on TPU, interpret mode elsewhere (slower in
@@ -25,20 +30,20 @@ pushes back).
 """
 from __future__ import annotations
 
-import functools
 import time
-from typing import Iterable, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.fused_mlp.fused_mlp import fits_vmem, fused_mlp
-from repro.kernels.fused_mlp.ref import fused_mlp_ref
-from repro.tune.cache import TuneCache, default_cache
+from repro.kernels import registry
+from repro.kernels.fused_mlp.ops import DEFAULT_TILE, candidate_tiles
+from repro.tune.cache import TuneCache, _dtype_name, default_cache
 
-DEFAULT_TILE = 128
-_CANDIDATE_TILES = (16, 32, 64, 128, 256, 512)
+__all__ = ["DEFAULT_TILE", "autotune", "autotune_registered",
+           "candidate_tiles", "serve_buckets", "sweep", "sweep_fused_mlp",
+           "widths_from_spec"]
 
 
 def widths_from_spec(spec: dict) -> Optional[List[int]]:
@@ -69,20 +74,6 @@ def _acts_for(n_layers: int, acts=None) -> tuple:
     return ("relu",) * (n_layers - 1) + ("identity",)
 
 
-def candidate_tiles(widths: Sequence[int], bucket: int,
-                    extra: Iterable[int] = ()) -> List[int]:
-    """Tiles worth sweeping for one bucket: the standard ladder clipped
-    to the bucket, the bucket itself (grid of 1), and any extras —
-    deduped, VMEM-checked, default first so ties keep the default."""
-    cands = [DEFAULT_TILE]
-    for t in list(_CANDIDATE_TILES) + [bucket] + list(extra):
-        t = int(t)
-        if t <= 0 or t > bucket or t in cands:
-            continue
-        cands.append(t)
-    return [t for t in cands if fits_vmem(widths, t)]
-
-
 def _measure_us(fn, reps: int, warmup: int) -> float:
     for _ in range(warmup):
         jax.block_until_ready(fn())
@@ -94,74 +85,107 @@ def _measure_us(fn, reps: int, warmup: int) -> float:
     return float(np.median(ts)) * 1e6
 
 
-def sweep_fused_mlp(widths: Sequence[int], bucket: int, *,
-                    dtype=jnp.float32, acts=None, reps: int = 5,
-                    warmup: int = 2, cache: Optional[TuneCache] = None,
-                    seed: int = 0, force: bool = False) -> dict:
-    """Measure every candidate tile for one (widths, bucket) cell.
+def _outputs_match(spec, out, ref) -> bool:
+    """Spec-declared comparison: bit-identity unless the spec carries a
+    tolerance (an output may be a pytree, e.g. rwkv6's (o, state))."""
+    a_leaves = jax.tree.leaves(out)
+    b_leaves = jax.tree.leaves(ref)
+    if len(a_leaves) != len(b_leaves):
+        return False
+    for a, b in zip(a_leaves, b_leaves):
+        a, b = np.asarray(a), np.asarray(b)
+        if spec.tol is None:
+            if not np.array_equal(a, b):
+                return False
+        else:
+            rtol, atol = spec.tol
+            if not np.allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               rtol=rtol, atol=atol):
+                return False
+    return True
 
-    Returns (and persists) the record ``fused_mlp_op`` will consult.
-    Candidates whose output is not bit-identical to the ref oracle are
+
+def sweep(kernel, problem: dict, *, reps: int = 5, warmup: int = 2,
+          cache: Optional[TuneCache] = None, seed: int = 0,
+          force: bool = False) -> dict:
+    """Measure every candidate config for one (kernel, problem) cell.
+
+    Returns (and persists) the record the registry dispatch will
+    consult.  Candidates whose output fails the spec's oracle check are
     disqualified — a tuned config must never change serving results.
+    The spec's defaults are always ``candidates[0]``, so the winner's
+    ``speedup_x`` is measured against the exact config dispatch would
+    use untuned.
     """
-    widths = [int(w) for w in widths]
-    bucket = int(bucket)
-    cache = cache or default_cache()
+    spec = registry.get_spec(kernel) if isinstance(kernel, str) else kernel
+    problem = dict(problem)
+    problem["dtype"] = _dtype_name(problem.get("dtype", "float32"))
+    cache = cache or default_cache(spec.name)
     backend = jax.default_backend()
-    cached = None if force else cache.lookup(widths, dtype, backend, bucket)
-    if cached is not None:
-        return cached
+    key = spec.cache_key(problem, backend)
+    if not force:
+        cached = cache.get(key)
+        if cached is not None:
+            return cached
 
-    acts = _acts_for(len(widths) - 1, acts)
     rng = np.random.default_rng(seed)
-    ws = [jnp.asarray(rng.normal(size=(a, b)).astype(np.float32) * 0.3,
-                      dtype) for a, b in zip(widths[:-1], widths[1:])]
-    bs = [jnp.asarray(rng.normal(size=(b,)).astype(np.float32) * 0.1, dtype)
-          for b in widths[1:]]
-    x = jnp.asarray(rng.normal(size=(bucket, widths[0])).astype(np.float32),
-                    dtype)
+    arrays = spec.make_call(problem, rng)
     # jitted oracle: the serving path always runs compiled, and XLA's
-    # eager-vs-compiled dots round differently — compare like with like
-    ref = np.asarray(jax.jit(fused_mlp_ref, static_argnames=("acts",))(
-        x, ws, bs, acts=acts))
+    # eager-vs-compiled ops round differently — compare like with like
+    ref = jax.jit(lambda *a: spec.ref_call(problem, a))(*arrays)
+    ref = jax.tree.map(np.asarray, ref)
     interpret = backend != "tpu"
+    defaults = spec.defaults()
 
     swept = []
-    for tile in candidate_tiles(widths, bucket):
-        fn = jax.jit(functools.partial(fused_mlp, batch_tile=tile,
-                                       interpret=interpret),
-                     static_argnames=("acts",))
+    for params in spec.candidates(problem):
+        fn = jax.jit(lambda *a, _p=dict(params): spec.run_call(
+            problem, a, _p, interpret=interpret))
+        entry = {"params": dict(params)}
         try:
-            out = np.asarray(fn(x, ws, bs, acts=acts))
-            exact = bool(np.array_equal(out, ref))
-            us = _measure_us(lambda: fn(x, ws, bs, acts=acts), reps, warmup)
-        except Exception as e:  # a tile the backend rejects is just skipped
-            swept.append({"batch_tile": tile, "us": None, "exact": False,
-                          "error": f"{type(e).__name__}: {e}"[:200]})
-            continue
-        swept.append({"batch_tile": tile, "us": round(us, 2),
-                      "exact": exact})
+            out = fn(*arrays)
+            entry["exact"] = _outputs_match(spec, out, ref)
+            entry["us"] = round(
+                _measure_us(lambda: fn(*arrays), reps, warmup), 2)
+        except Exception as e:  # a config the backend rejects is skipped
+            entry.update(us=None, exact=False,
+                         error=f"{type(e).__name__}: {e}"[:200])
+        swept.append(entry)
 
     valid = [s for s in swept if s["exact"]]
     default = next((s for s in swept
-                    if s["batch_tile"] == DEFAULT_TILE and s["us"]), None)
+                    if s["params"] == defaults and s["us"]), None)
     if valid:
         best = min(valid, key=lambda s: s["us"])
         default_us = default["us"] if default else best["us"]
-        rec = {"batch_tile": best["batch_tile"], "us": best["us"],
+        rec = {"params": dict(best["params"]), "us": best["us"],
                "default_us": default_us,
                "speedup_x": round(default_us / best["us"], 3)
                if best["us"] else 1.0,
                "exact": True, "backend": backend, "swept": swept,
                "tuned_at": time.time()}
     else:  # nothing validated: record the failure so we don't re-sweep,
-        # but best_tile() will refuse to serve it (exact=False)
-        rec = {"batch_tile": DEFAULT_TILE, "us": None,
+        # but the dispatch path will refuse to serve it (exact=False)
+        rec = {"params": dict(defaults), "us": None,
                "default_us": default["us"] if default else None,
                "speedup_x": 1.0, "exact": False, "backend": backend,
                "swept": swept, "tuned_at": time.time()}
-    cache.store(widths, dtype, backend, bucket, rec)
+    rec.update(rec["params"])  # flattened winner params (legacy readers)
+    cache.put(key, rec)
     return rec
+
+
+def sweep_fused_mlp(widths: Sequence[int], bucket: int, *,
+                    dtype=jnp.float32, acts=None, reps: int = 5,
+                    warmup: int = 2, cache: Optional[TuneCache] = None,
+                    seed: int = 0, force: bool = False) -> dict:
+    """One fused_mlp (widths, bucket) cell through the generic sweep."""
+    widths = tuple(int(w) for w in widths)
+    problem = {"widths": widths, "acts": _acts_for(len(widths) - 1, acts),
+               "batch": int(bucket), "dtype": _dtype_name(dtype)}
+    return sweep("fused_mlp", problem, reps=reps, warmup=warmup,
+                 cache=cache, seed=seed, force=force)
 
 
 def serve_buckets(min_bucket: int = 8, max_batch_rows: int = 1024,
@@ -185,7 +209,7 @@ def autotune(target, buckets: Optional[Sequence[int]] = None, *,
              reps: int = 5, warmup: int = 2,
              cache: Optional[TuneCache] = None,
              force: bool = False, verbose: bool = False) -> List[dict]:
-    """Warm the tune cache for everything an engine will serve.
+    """Warm the fused_mlp tune cache for everything an engine will serve.
 
     ``target`` is a bundle path (widths derived from its spec.json) or
     an explicit widths sequence.  ``buckets`` defaults to the serve-path
@@ -223,8 +247,37 @@ def autotune(target, buckets: Optional[Sequence[int]] = None, *,
         recs.append(rec)
         if verbose:
             print(f"[tune] widths={widths} bucket={b}: "
-                  f"tile={rec['batch_tile']} "
+                  f"tile={rec['params'].get('batch_tile')} "
                   f"{rec['us']}us vs default {rec['default_us']}us "
                   f"({rec['speedup_x']}x) exact={rec['exact']}",
                   flush=True)
+    return recs
+
+
+def autotune_registered(kernels: Optional[Sequence[str]] = None, *,
+                        reps: int = 5, warmup: int = 2,
+                        force: bool = False,
+                        verbose: bool = False) -> List[dict]:
+    """Pre-populate every registered kernel's representative problems.
+
+    Kernels with no tunable params (rwkv6_chunk) are skipped — there is
+    nothing to pick.  ``dryrun --tune`` calls this after the
+    bundle-aware fused_mlp warm-up so a deploy tunes the whole kernel
+    surface, not just the surrogate MLP.
+    """
+    recs = []
+    names = list(kernels) if kernels else [
+        s.name for s in registry.all_specs()]
+    for name in names:
+        spec = registry.get_spec(name)
+        if not spec.params:
+            continue
+        for problem in spec.default_problems:
+            rec = sweep(spec, problem, reps=reps, warmup=warmup, force=force)
+            recs.append(rec)
+            if verbose:
+                print(f"[tune] {spec.name} {spec.cache_key(dict(problem), jax.default_backend())}: "
+                      f"params={rec['params']} {rec['us']}us vs default "
+                      f"{rec['default_us']}us ({rec['speedup_x']}x) "
+                      f"exact={rec['exact']}", flush=True)
     return recs

@@ -108,6 +108,47 @@ def test_best_tile_refuses_unvalidated_entries(tmp_path, monkeypatch):
     assert best_tile(widths, jnp.float32, "cpu", 200) == 64
 
 
+def test_tune_cache_migrates_legacy_flat_file(tmp_path):
+    """A schema-1 cache (flat {key: record}, bare batch_tile) must lift
+    into the namespaced schema-2 layout on first load — atomically, so
+    deployed caches and the CI actions/cache entry survive the registry
+    refactor — and keep serving its entries."""
+    import json
+    p = tmp_path / "fused_mlp.json"
+    key = shape_key([5, 16, 1], jnp.float32, "cpu", 256)
+    p.write_text(json.dumps({key: {"batch_tile": 64, "us": 10.0,
+                                   "exact": True}}))
+    c = TuneCache("fused_mlp", p)
+    rec = c.lookup([5, 16, 1], jnp.float32, "cpu", 256)
+    assert rec["batch_tile"] == 64
+    assert rec["params"] == {"batch_tile": 64}  # record migrated
+    # ... and the winner reaches the dispatch path
+    import repro.tune.cache as cache_mod
+    data = json.loads(p.read_text())
+    assert data["schema"] == cache_mod.SCHEMA  # file rewritten
+    assert data["kernel"] == "fused_mlp"
+    assert data["entries"][key]["params"] == {"batch_tile": 64}
+    # a fresh instance reads the migrated layout directly
+    c2 = TuneCache("fused_mlp", p)
+    assert c2.lookup([5, 16, 1], jnp.float32, "cpu", 256)["us"] == 10.0
+
+
+def test_best_params_namespaced_per_kernel(tmp_path, monkeypatch):
+    from repro.tune import best_params
+    import repro.tune.cache as cache_mod
+    fa = TuneCache("flash_attention", tmp_path / "flash_attention.json")
+    fa.put("k1", {"params": {"block_q": 32, "block_kv": 64},
+                  "exact": True})
+    fa.put("k2", {"params": {"block_q": 16, "block_kv": 16},
+                  "exact": False})
+    monkeypatch.setattr(cache_mod, "_default", {"flash_attention": fa})
+    assert best_params("flash_attention", ["k1"]) == {"block_q": 32,
+                                                      "block_kv": 64}
+    assert best_params("flash_attention", ["k2"]) is None  # unvalidated
+    assert best_params("flash_attention", ["k2", "k1"]) == \
+        {"block_q": 32, "block_kv": 64}  # ordered fallback chain
+
+
 def test_shape_key_stable():
     assert shape_key([5, 16, 1], jnp.float32, "cpu", 256) == \
         shape_key((5, 16, 1), jnp.float32, "cpu", 256)
@@ -190,7 +231,7 @@ def test_sweep_fused_mlp_picks_exact_winner(tmp_path):
     c = TuneCache("fused_mlp", tmp_path / "fused_mlp.json")
     rec = sweep_fused_mlp([4, 16, 2], 32, cache=c, reps=1, warmup=0)
     assert rec["exact"] is True
-    tiles = [s["batch_tile"] for s in rec["swept"]]
+    tiles = [s["params"]["batch_tile"] for s in rec["swept"]]
     assert 128 in tiles  # the default is always in the comparison set
     valid_us = [s["us"] for s in rec["swept"] if s["exact"]]
     assert rec["us"] == min(valid_us)
@@ -246,8 +287,8 @@ def test_fused_mlp_op_consults_tune_cache(monkeypatch):
                     interpret=interpret)
 
     monkeypatch.setattr(ops_mod, "fused_mlp", spy)
-    monkeypatch.setattr(cache_mod, "best_tile",
-                        lambda widths, dtype, backend, batch: 32)
+    monkeypatch.setattr(cache_mod, "best_params",
+                        lambda kernel, keys: {"batch_tile": 32})
     rng = np.random.default_rng(0)
     ws = [jnp.asarray(rng.normal(size=(4, 16)).astype(np.float32))]
     bs = [jnp.asarray(rng.normal(size=(16,)).astype(np.float32))]
@@ -255,8 +296,8 @@ def test_fused_mlp_op_consults_tune_cache(monkeypatch):
     ops_mod.fused_mlp_op(x, ws, bs, ("identity",), force_kernel=True)
     assert seen["tile"] == 32  # tuned tile, not the hardcoded default
     # a cached tile that no longer fits VMEM falls back to the default
-    monkeypatch.setattr(cache_mod, "best_tile",
-                        lambda widths, dtype, backend, batch: 1 << 20)
+    monkeypatch.setattr(cache_mod, "best_params",
+                        lambda kernel, keys: {"batch_tile": 1 << 20})
     ops_mod.fused_mlp_op(x, ws, bs, ("identity",), force_kernel=True)
     assert seen["tile"] == 128
 
@@ -266,6 +307,80 @@ def test_serve_buckets_cover_policy_range():
     # shard floor raises the smallest bucket and keeps divisibility
     bs = serve_buckets(8, 100, n_shards=6)
     assert bs[0] == 12 and all(b % 6 == 0 for b in bs)
+
+
+# ------------------------------------------------- generic kernel sweep ----
+def test_sweep_stencil_gather_bit_exact_winner(tmp_path):
+    from repro.tune import sweep
+    c = TuneCache("stencil_gather", tmp_path / "stencil_gather.json")
+    problem = {"h": 40, "w": 40, "out_h": 36, "out_w": 36,
+               "offsets": ((0, 1), (1, 0), (0, 0)), "origin": (1, 1),
+               "dtype": "float32"}
+    rec = sweep("stencil_gather", problem, cache=c, reps=1, warmup=0)
+    assert rec["exact"] is True
+    assert {"block_h", "block_w"} <= set(rec["params"])
+    # the spec default is always the baseline, so this is structural
+    assert rec["speedup_x"] >= 1.0
+    # cached: a second sweep returns the stored record unmeasured
+    assert sweep("stencil_gather", problem, cache=c, reps=1,
+                 warmup=0) == rec
+
+
+def test_sweep_flash_attention_validates_to_spec_tolerance(tmp_path):
+    """Flash attention declares a tolerance (online-softmax block order
+    changes rounding); every stored winner must still validate."""
+    from repro.tune import sweep
+    c = TuneCache("flash_attention", tmp_path / "flash_attention.json")
+    problem = {"b": 1, "sq": 16, "skv": 16, "h": 1, "kv": 1, "hd": 8,
+               "causal": True, "q_offset": 0, "dtype": "float32"}
+    rec = sweep("flash_attention", problem, cache=c, reps=1, warmup=0)
+    assert rec["exact"] is True
+    assert {"block_q", "block_kv"} <= set(rec["params"])
+    valid_us = [s["us"] for s in rec["swept"] if s["exact"]]
+    assert rec["us"] == min(valid_us)
+
+
+def test_sweep_record_reaches_registry_dispatch(tmp_path, monkeypatch):
+    """No stubs between store and lookup: a swept stencil winner must be
+    what the registry dispatch actually applies."""
+    import repro.tune.cache as cache_mod
+    from repro.kernels import registry
+    from repro.tune import sweep
+    c = TuneCache("stencil_gather", tmp_path / "stencil_gather.json")
+    monkeypatch.setattr(cache_mod, "_default", {"stencil_gather": c})
+    spec = registry.get_spec("stencil_gather")
+    problem = {"h": 40, "w": 40, "out_h": 36, "out_w": 36,
+               "offsets": ((0, 1), (1, 0), (0, 0)), "origin": (1, 1),
+               "dtype": "float32"}
+    rec = sweep(spec, problem, cache=c, reps=1, warmup=0)
+    seen = {}
+    orig = spec.run_call
+
+    def spy(problem, arrays, params, *, interpret):
+        seen.update(params)
+        return orig(problem, arrays, params, interpret=interpret)
+
+    monkeypatch.setattr(spec, "run_call", spy)
+    arrays = spec.make_call(problem, np.random.default_rng(0))
+    registry.dispatch(spec, problem, arrays, force_kernel=True)
+    assert seen == rec["params"]
+
+
+def test_autotune_registered_skips_paramless_kernels(tmp_path, monkeypatch):
+    """rwkv6_chunk has no tunables — the deploy warm-up must not sweep
+    it (there is nothing to pick)."""
+    import repro.tune.kernel_tuner as kt
+    from repro.tune import autotune_registered
+    swept = []
+    monkeypatch.setattr(
+        kt, "sweep",
+        lambda spec, problem, **kw: swept.append(spec.name) or
+        {"params": {}, "us": 1.0, "default_us": 1.0, "speedup_x": 1.0,
+         "exact": True})
+    autotune_registered(["rwkv6_chunk"])
+    assert swept == []
+    autotune_registered(["stencil_gather"])
+    assert swept == ["stencil_gather"]
 
 
 # ------------------------------------------------ adaptive controller ------
@@ -330,6 +445,151 @@ def test_controller_bucket_target_amortizes_overhead():
     t = c.batch_rows_for("k", None)
     assert 8 < t < 4096
     assert t & (t - 1) == 0  # power of two
+
+
+# ------------------------------------------- measured-latency loop ---------
+def _warm_stats(bucket, busy_s, n=3, key="k"):
+    st = ServeStats(key)
+    for _ in range(n):
+        st.on_batch(requests=1, rows=bucket, bucket=bucket, reason="t",
+                    busy_s=busy_s, latencies_s=[busy_s])
+    return st
+
+
+def test_stats_batch_latency_ewma_and_warmup_gate():
+    st = ServeStats("k")
+    assert st.batch_latency_s(64) is None  # cold
+    # first observation of a bucket carries its one-time jit compile:
+    # it must never blend into the EWMA the controller trusts
+    st.on_batch(requests=1, rows=64, bucket=64, reason="t", busy_s=0.900,
+                latencies_s=[0.9])
+    assert st.batch_latency_s(64, min_batches=2) is None  # below min obs
+    st.on_batch(requests=1, rows=64, bucket=64, reason="t", busy_s=0.020,
+                latencies_s=[0.02])
+    # the second observation *replaces* the compile-tainted seed
+    assert st.batch_latency_s(64, min_batches=2) == pytest.approx(0.020)
+    st.on_batch(requests=1, rows=64, bucket=64, reason="t", busy_s=0.010,
+                latencies_s=[0.01])
+    ewma = st.batch_latency_s(64, min_batches=2)
+    # from the third batch on, a plain EWMA tracks the service time
+    assert 0.010 < ewma < 0.020
+    assert st.batch_latencies()[64][1] == 3
+    snap = st.snapshot()
+    assert snap["batch_latency_batches"] == {64: 3}
+    assert snap["batch_latency_ewma_ms"][64] == pytest.approx(ewma * 1e3,
+                                                              rel=1e-3)
+
+
+def test_stats_failed_dispatches_never_feed_the_latency_model():
+    st = ServeStats("k")
+    st.on_enqueue(8)
+    st.on_failure(requests=1, rows=8, reason="t", busy_s=5.0)
+    assert st.batch_latencies() == {}
+
+
+def test_controller_measured_latency_tightens_the_cap():
+    """A roofline prior that overestimates the service time (huge
+    overhead guess) holds lone callers too long; once the true latency
+    is measured, the cap shrinks to the tight measured factor."""
+    c = _ctrl(overhead_s=5e-3, measured_min_batches=2, decision_ttl_s=0.0)
+    measured = 5e-4
+    # warm the bucket the service cap prices: nothing pending -> the
+    # smallest dispatchable bucket
+    st = _warm_stats(c.policy.min_bucket, measured, n=3)
+    d = c.delay_for("k", st)
+    dec = c.last_decision["k"]
+    assert dec["latency_source"] == "measured"
+    assert dec["batch_latency_s"] == pytest.approx(measured, rel=1e-6)
+    assert d == pytest.approx(
+        c.measured_service_factor * measured, rel=1e-6)
+    assert d < c.service_factor * dec["predicted_batch_latency_s"]
+
+
+def test_controller_measured_latency_never_inflates_the_cap():
+    """The anti-feedback property: serving getting *slower* than the
+    prior must not lengthen deadlines (that would compound a slowdown
+    into queueing delay)."""
+    c = _ctrl(measured_min_batches=2, decision_ttl_s=0.0)
+    cold = c.delay_for("cold", None)  # roofline-only bound, same widths
+    st = _warm_stats(c.policy.min_bucket, 5.0, n=3)  # pathological 5s
+    d = c.delay_for("k", st)
+    assert d <= cold + 1e-9
+
+
+def test_controller_corrects_roofline_from_nearest_warm_bucket():
+    """Unmeasured buckets borrow the nearest warm bucket's measured /
+    predicted ratio — one warm bucket recalibrates the whole curve."""
+    c = _ctrl(measured_min_batches=2, decision_ttl_s=0.0)
+    widths = [5, 16, 1]
+    st = _warm_stats(64, busy_s=10.0 * c.predict_latency_s(widths, 64), n=3)
+    lat, source = c.latency_s(widths, 256, st)
+    assert source == "corrected"
+    assert lat == pytest.approx(10.0 * c.predict_latency_s(widths, 256),
+                                rel=0.05)
+
+
+def test_controller_cap_bucket_matches_shard_rounded_dispatch():
+    """The batcher's dispatch buckets are shard-rounded (bucket_for),
+    not always powers of two; the cap must price the bucket the
+    dispatch will actually produce so the exact-measured path hits."""
+    c = _ctrl(measured_min_batches=2, decision_ttl_s=0.0)
+    st = ServeStats("k")
+    for _ in range(3):  # warm the 12-row bucket a 6-shard mesh dispatches
+        st.on_enqueue(12)
+        st.on_batch(requests=1, rows=12, bucket=12, reason="t",
+                    busy_s=0.003, latencies_s=[0.003])
+    st.on_enqueue(10)  # 10 rows pending: pow2 says 16, observed says 12
+    c.delay_for("k", st)
+    dec = c.last_decision["k"]
+    assert dec["cap_bucket"] == 12
+    assert dec["latency_source"] == "measured"
+    assert dec["batch_latency_s"] == pytest.approx(0.003)
+
+
+def test_controller_cold_stats_fall_back_to_roofline_prior():
+    c = _ctrl(decision_ttl_s=0.0)
+    st = ServeStats("k")  # no batches completed yet
+    c.delay_for("k", st)
+    assert c.last_decision["k"]["latency_source"] == "roofline"
+
+
+def test_controller_open_loop_flag_ignores_measurements():
+    c = _ctrl(use_measured=False, decision_ttl_s=0.0)
+    st = _warm_stats(c.batch_rows_for("k", None), 5.0, n=10)
+    c.delay_for("k", st)
+    dec = c.last_decision["k"]
+    assert dec["latency_source"] == "roofline"
+    assert dec["batch_latency_s"] == dec["predicted_batch_latency_s"]
+
+
+def test_controller_broken_stats_degrade_to_roofline():
+    class _Boom(ServeStats):
+        def batch_latency_s(self, *a, **kw):
+            raise RuntimeError("stats backend gone")
+
+    c = _ctrl(decision_ttl_s=0.0)
+    st = _Boom("k")
+    d = c.delay_for("k", st)
+    assert d is not None
+    assert c.last_decision["k"]["latency_source"] == "roofline"
+
+
+def test_measured_latency_flows_through_real_queue(tmp_path):
+    """End to end: batches served through a real queue warm the stats,
+    and the controller's next decision prices the measured latency."""
+    mp = _bundle(tmp_path)
+    pol = FlushPolicy(max_batch_rows=1024, max_delay_s=0.05)
+    ctrl = AdaptiveFlushController(pol, warmup_requests=4,
+                                   measured_min_batches=1,
+                                   decision_ttl_s=0.0)
+    q = ServeQueue(pol, controller=ctrl)
+    for i in range(6):
+        q.submit(mp, _rows(4, seed=i))
+        q.flush(mp)
+    assert q.stats(mp).batch_latencies()  # batches recorded
+    ctrl.delay_for(mp, q.stats(mp))
+    assert ctrl.last_decision[mp]["latency_source"] in ("measured",
+                                                        "corrected")
 
 
 # -------------------------------------------- queue/controller wiring ------
