@@ -17,6 +17,7 @@ def main() -> None:
 
     from benchmarks import tables
     from benchmarks.kernel_bench import kernel_bench
+    from benchmarks.multihost_bench import bench_rows as multihost_rows
     from benchmarks.roofline import roofline_rows
     from benchmarks.serve_bench import serving_throughput
     from benchmarks.tune_bench import tune_rows
@@ -32,6 +33,7 @@ def main() -> None:
         "roofline": roofline_rows,                     # §Roofline (dry-run)
         "serve_throughput": serving_throughput,        # repro.serve coalescing
         "tune": tune_rows,                             # repro.tune autotuning
+        "multihost": multihost_rows,                   # pod serving (2 procs)
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

@@ -192,6 +192,11 @@ class InferenceEngine:
         (repeated bucket shapes from the serve batcher)."""
         if ctx is None or ctx.mesh is None or isinstance(x, jax.core.Tracer):
             return x
+        if isinstance(x, jax.Array) and not x.is_fully_addressable:
+            # a global (multi-process) array was already placed at
+            # assembly (ShardCtx.make_global); a device_put here would be
+            # a cross-process reshard and raises on most backends
+            return x
         key = (x.shape, ctx.mesh, ctx.multi_pod)
         if key not in self._shardings:
             self._shardings[key] = ctx.sharding_for(
@@ -244,7 +249,11 @@ class InferenceEngine:
         if isinstance(x, jax.core.Tracer):
             donate = False  # in-trace degrade: nothing to donate
         fn = self._apply_for(ctx, donate=donate)
-        return fn(self.params, self._place(x, ctx))[:n]
+        y = fn(self.params, self._place(x, ctx))
+        # a full-bucket batch (the pod path's pre-padded global arrays)
+        # skips the slice: slicing a non-addressable array outside jit
+        # raises, and [:n] of n rows is the identity anyway
+        return y if n == int(y.shape[0]) else y[:n]
 
     def infer_shape(self, in_shape):
         return self.net.out_shape()

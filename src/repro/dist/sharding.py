@@ -89,6 +89,52 @@ class ShardCtx:
         what shard_map wrappers hand to their in/out specs."""
         return self._candidates(logical)
 
+    def local_axis_size(self, logical: str) -> int:
+        """Shards of a logical axis owned by THIS process.
+
+        Equals :meth:`axis_size` in single-process runs; on a pod mesh
+        the ``pod`` axis spans processes, so a per-host data slab only
+        has to divide by the *local* extent (``mesh.local_mesh``) —
+        sizing it against the global shard count would force every host
+        to pad to the whole pod's width.
+        """
+        n = 1
+        local = getattr(self.mesh, "local_mesh", None)
+        local_shape = dict(local.shape) if local is not None else {}
+        for a in self._candidates(logical):
+            n *= local_shape.get(a, self.mesh.shape[a])
+        return n
+
+    def make_global(self, local_rows, logical_axes, *, global_shape=None):
+        """Assemble a (possibly cross-process) global array from this
+        process's local block.
+
+        ``local_rows`` is the data this process contributes — in a pod,
+        its slab of the leading (batch) dimension; ``global_shape`` is
+        the full array's shape (defaults to the local shape, which is
+        only correct single-process).  Multi-process assembly goes
+        through ``jax.make_array_from_process_local_data`` so the result
+        is a global jax.Array whose addressable shards are exactly this
+        host's rows; single-process it degrades to a plain sharded
+        ``device_put``.  Either way the array is placed under the
+        resolved sharding for ``logical_axes`` — the per-host feeding
+        primitive for the ``pod`` axis.
+        """
+        import numpy as np
+        x = np.asarray(local_rows)
+        if self.mesh is None:
+            return x
+        shape = tuple(global_shape) if global_shape is not None else x.shape
+        sharding = NamedSharding(self.mesh, self.spec_for(
+            shape, tuple(logical_axes)))
+        if jax.process_count() == 1:
+            if shape != x.shape:
+                raise ValueError(
+                    f"make_global: single-process local block {x.shape} "
+                    f"must equal the global shape {shape}")
+            return jax.device_put(x, sharding)
+        return jax.make_array_from_process_local_data(sharding, x, shape)
+
     def spec_for(self, shape: Sequence[int],
                  logical_axes: Sequence[Optional[str]]) -> P:
         """PartitionSpec for `shape`, one logical name (or None) per dim."""

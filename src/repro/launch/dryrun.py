@@ -262,6 +262,12 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--pod-smoke", action="store_true",
+                    help="spawn a real 2-process pod (jax.distributed on "
+                         "CPU) and run the cross-host serve round-trip — "
+                         "the multi-process counterpart of --smoke's "
+                         "single-process 512-device fiction")
+    ap.add_argument("--pod-processes", type=int, default=2)
     ap.add_argument("--tune", action="store_true",
                     help="pre-populate the kernel autotune cache for the "
                          "serve-path shapes (see repro.tune)")
@@ -281,6 +287,13 @@ def main():
         run_tune(args.tune_bundle,
                  [int(b) for b in args.tune_buckets.split(",")],
                  force=args.force, kernels=args.tune_kernels)
+        return
+
+    if args.pod_smoke:
+        # children build their own device view (spawn_local_pod overrides
+        # XLA_FLAGS per child); the parent never initializes jax here
+        from repro.launch.multihost import run_smoke as run_pod_smoke
+        run_pod_smoke(processes=args.pod_processes)
         return
 
     if args.smoke:

@@ -37,6 +37,32 @@ def make_production_mesh(*, multi_pod: bool = False):
         np.asarray(devices).reshape(shape), axes, **_axis_kwargs(len(axes)))
 
 
+def make_pod_mesh(axes=("pod", "data")):
+    """Global mesh over every pod process's devices: one ``pod`` row per
+    process, that process's local devices along ``data``.
+
+    Device order is process-major (sorted by ``process_index``), which is
+    the contract ``Batcher.dispatch_pod`` relies on: the global batch's
+    leading dim sharded over ``("pod", "data")`` puts host *h*'s slab of
+    rows on host *h*'s devices, so results scatter back without any
+    cross-host gather.  Single-process this is a ``1 x n_local`` mesh and
+    everything degrades to the ordinary data-parallel path.  Requires a
+    bootstrapped pod (``repro.launch.multihost.bootstrap``) when
+    ``jax.process_count() > 1``.
+    """
+    import numpy as np
+    procs = jax.process_count()
+    devices = sorted(jax.devices(), key=lambda d: (d.process_index, d.id))
+    if len(devices) % procs:
+        raise RuntimeError(
+            f"make_pod_mesh: {len(devices)} devices do not divide over "
+            f"{procs} processes (heterogeneous hosts are unsupported)")
+    local = len(devices) // procs
+    return jax.sharding.Mesh(
+        np.asarray(devices).reshape(procs, local), axes,
+        **_axis_kwargs(len(axes)))
+
+
 def make_local_mesh(shape=None, axes=("data", "model")):
     """Smoke/test mesh over whatever devices exist (usually 1 CPU)."""
     import numpy as np

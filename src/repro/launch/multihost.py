@@ -1,0 +1,436 @@
+"""Multi-process pod bootstrap + local test harness.
+
+Everything before this module ran the ``pod`` mesh axis as a fiction:
+``dryrun --smoke`` forces 512 host devices in *one* process and calls it
+a pod.  This module makes the axis real:
+
+``bootstrap()``
+    Environment-driven wrapper around ``jax.distributed.initialize``.
+    Launchers (SLURM scripts, k8s pods, :func:`spawn_local_pod`) export
+    ``REPRO_COORDINATOR`` / ``REPRO_NUM_PROCESSES`` / ``REPRO_PROCESS_ID``
+    (+ optional ``REPRO_LOCAL_DEVICES`` host-device partitioning) and
+    every process calls ``bootstrap()`` before touching jax state.  On
+    CPU it enables the Gloo cross-process collectives the backend needs
+    (without them every multi-process computation fails with
+    "Multiprocess computations aren't implemented on the CPU backend").
+
+``spawn_local_pod(n, target)``
+    CPU-local test harness: forks ``n`` fresh processes on this machine
+    (spawn, never fork — jax is multithreaded), each bootstrapping into
+    one pod process with ``devices_per_host`` forced host-platform
+    devices, and runs ``target`` ("pkg.mod:fn") in all of them.  This is
+    what the multi-process CI lane and tests/test_multihost.py drive:
+    real ``jax.distributed`` process groups, real cross-host collectives,
+    one machine.
+
+``allgather_counts`` / ``barrier``
+    The two collectives the serve path needs: agreeing on per-host row
+    counts before assembling a cross-host mega-batch
+    (``Batcher.dispatch_pod``), and synchronizing bundle rewrites between
+    batches (the NAS-retrain-under-load scenario in
+    ``benchmarks/multihost_bench.py``).
+
+No jax import at module level: children of :func:`spawn_local_pod`
+import this module *before* their env is final, and the parent harness
+must be able to drive pods without initializing a backend of its own.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import os
+import socket
+import tempfile
+import time
+import traceback
+from typing import Any, Dict, List, Optional, Sequence
+
+ENV_COORDINATOR = "REPRO_COORDINATOR"
+ENV_NUM_PROCESSES = "REPRO_NUM_PROCESSES"
+ENV_PROCESS_ID = "REPRO_PROCESS_ID"
+ENV_LOCAL_DEVICES = "REPRO_LOCAL_DEVICES"
+
+_HOST_DEVICE_FLAG = "--xla_force_host_platform_device_count"
+
+
+@dataclasses.dataclass(frozen=True)
+class PodInfo:
+    """What bootstrap() resolved: this process's place in the pod."""
+
+    process_id: int = 0
+    num_processes: int = 1
+    coordinator: Optional[str] = None
+
+    @property
+    def is_multiprocess(self) -> bool:
+        return self.num_processes > 1
+
+
+def _env_int(value, name: str, default: Optional[int]) -> Optional[int]:
+    if value is not None:
+        return int(value)
+    raw = os.environ.get(name)
+    return int(raw) if raw else default
+
+
+def _enable_cpu_collectives() -> None:
+    """Switch the CPU client to Gloo collectives (idempotent, pre-init).
+
+    Harmless on TPU/GPU — the flag only affects CPU client creation —
+    and guarded so jax versions without the option degrade to their
+    default instead of crashing the bootstrap.
+    """
+    import jax
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except (AttributeError, ValueError):  # pre-gloo jax or renamed flag
+        pass
+
+
+def bootstrap(coordinator: Optional[str] = None,
+              num_processes: Optional[int] = None,
+              process_id: Optional[int] = None,
+              local_devices: Optional[int] = None) -> PodInfo:
+    """Join the pod described by args/env; single-process is a no-op.
+
+    Must run before anything initializes a jax backend (first device
+    query / computation): ``XLA_FLAGS`` partitioning and the distributed
+    client cannot be installed afterwards.  Safe to call again once
+    initialized — an already-joined pod is returned as-is.
+    """
+    coordinator = coordinator or os.environ.get(ENV_COORDINATOR)
+    num_processes = _env_int(num_processes, ENV_NUM_PROCESSES, 1)
+    process_id = _env_int(process_id, ENV_PROCESS_ID, 0)
+    local_devices = _env_int(local_devices, ENV_LOCAL_DEVICES, None)
+    if local_devices:
+        flags = os.environ.get("XLA_FLAGS", "")
+        if _HOST_DEVICE_FLAG not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} {_HOST_DEVICE_FLAG}={local_devices}".strip())
+
+    if num_processes <= 1:
+        return PodInfo(0, 1, None)
+
+    import jax
+    from jax._src import distributed as _dist
+    if getattr(_dist.global_state, "client", None) is None:
+        if not coordinator:
+            raise RuntimeError(
+                f"bootstrap: {num_processes} processes requested but no "
+                f"coordinator address (set {ENV_COORDINATOR} or pass "
+                f"coordinator=)")
+        # only flip the collectives flag once we are certain to join a
+        # pod: a gloo CPU client without a distributed runtime fails to
+        # initialize, which would poison this process's backend
+        _enable_cpu_collectives()
+        jax.distributed.initialize(coordinator_address=coordinator,
+                                   num_processes=num_processes,
+                                   process_id=process_id)
+    return PodInfo(jax.process_index(), jax.process_count(), coordinator)
+
+
+# ----------------------------------------------------------- pod state -----
+
+def is_multiprocess() -> bool:
+    import jax
+    return jax.process_count() > 1
+
+
+def process_index() -> int:
+    import jax
+    return jax.process_index()
+
+
+def process_count() -> int:
+    import jax
+    return jax.process_count()
+
+
+def allgather_ints(values: Sequence[int]):
+    """Every process's ``values`` as an int64 array [process_count, k].
+
+    The serve path's agreement primitive: every host learns every host's
+    pending row count (and row dtype), so all of them derive the same
+    per-host slab and global bucket for a cross-host mega-batch.
+    Collective — every process must call it at the same point with the
+    same ``k``.  Single-process: ``[values]`` without touching the
+    collectives stack.
+    """
+    import numpy as np
+    vals = np.asarray([int(v) for v in values], np.int64).reshape(1, -1)
+    if not is_multiprocess():
+        return vals
+    from jax.experimental import multihost_utils
+    g = multihost_utils.process_allgather(vals[0].astype(np.int32))
+    return np.asarray(g).reshape(process_count(), -1).astype(np.int64)
+
+
+def allgather_counts(n: int):
+    """Per-process values of ``n`` as an int64 array of len process_count."""
+    return allgather_ints([n])[:, 0]
+
+
+def barrier(tag: str = "repro-pod") -> None:
+    """Block until every pod process reaches this point (no-op solo)."""
+    if not is_multiprocess():
+        return
+    from jax.experimental import multihost_utils
+    multihost_utils.sync_global_devices(tag)
+
+
+# ----------------------------------------------------- local pod harness ---
+
+class PodWorkerError(RuntimeError):
+    """One or more spawn_local_pod workers failed; message carries all
+    per-process tracebacks."""
+
+
+def _free_port() -> int:
+    s = socket.socket()
+    try:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+    finally:
+        s.close()
+
+
+def _pod_child(conn, env: Dict[str, str], target: str,
+               args: tuple, kwargs: dict) -> None:
+    """Spawn-side entry: env first, then bootstrap, then the target.
+
+    Top-level so the spawn pickler can import it by reference; the env
+    update happens before any jax import, which is why this module must
+    stay jax-free at import time.
+    """
+    os.environ.update(env)
+    try:
+        from repro.launch.multihost import bootstrap
+        bootstrap()
+        mod_name, _, fn_name = target.partition(":")
+        fn = getattr(importlib.import_module(mod_name), fn_name)
+        conn.send(("ok", fn(*args, **(kwargs or {}))))
+    except BaseException:
+        try:
+            conn.send(("err", traceback.format_exc()))
+        except Exception:
+            pass
+    finally:
+        conn.close()
+
+
+def spawn_local_pod(n: int, target: str, args: tuple = (), *,
+                    kwargs: Optional[dict] = None, devices_per_host: int = 1,
+                    timeout_s: float = 300.0,
+                    extra_env: Optional[Dict[str, str]] = None) -> List[Any]:
+    """Run ``target`` ("pkg.mod:fn") in ``n`` fresh pod processes.
+
+    Each child gets ``devices_per_host`` forced host-platform CPU
+    devices, joins one ``jax.distributed`` process group over localhost,
+    and runs the target with ``args``/``kwargs``.  Returns the targets'
+    return values ordered by process id (results must pickle).  Raises
+    :class:`PodWorkerError` with every failing process's traceback, or
+    ``TimeoutError`` if any child outlives ``timeout_s`` (stragglers are
+    killed — a hung collective must not hang CI).
+    """
+    import multiprocessing as mp
+    if n < 1:
+        raise ValueError(f"spawn_local_pod needs n >= 1, got {n}")
+    port = _free_port()
+    ctx = mp.get_context("spawn")
+    procs, conns = [], []
+    for pid in range(n):
+        env = {
+            ENV_COORDINATOR: f"127.0.0.1:{port}",
+            ENV_NUM_PROCESSES: str(n),
+            ENV_PROCESS_ID: str(pid),
+            ENV_LOCAL_DEVICES: str(devices_per_host),
+            "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
+            # children build their own device view; never inherit the
+            # parent's partitioning (dryrun forces 512 devices at import)
+            "XLA_FLAGS": f"{_HOST_DEVICE_FLAG}={devices_per_host}",
+        }
+        env.update(extra_env or {})
+        parent_conn, child_conn = ctx.Pipe(duplex=False)
+        p = ctx.Process(target=_pod_child,
+                        args=(child_conn, env, target, tuple(args),
+                              dict(kwargs or {})),
+                        name=f"repro-pod-{pid}", daemon=True)
+        p.start()
+        child_conn.close()
+        procs.append(p)
+        conns.append(parent_conn)
+
+    from multiprocessing import connection as mp_connection
+    results: List[Any] = [None] * n
+    errors: List[str] = []
+    # one shared deadline (sequential per-process timeouts would stack to
+    # n * timeout_s and outlive the CI job's own limit), collected
+    # round-robin: a fast failure in any process surfaces immediately
+    # instead of hiding behind an earlier pid's hung collective — once a
+    # failure lands, surviving peers (likely hung in the now-peerless
+    # collective) get a short grace, not the whole budget
+    deadline = time.monotonic() + timeout_s
+    fail_grace_s = 15.0
+    by_conn = {conn: pid for pid, conn in enumerate(conns)}
+    pending = dict(enumerate(zip(procs, conns)))
+    while pending:
+        left = deadline - time.monotonic()
+        if left <= 0:
+            break
+        ready = mp_connection.wait(
+            [c for _, c in pending.values()], timeout=left)
+        for conn in ready:
+            pid = by_conn[conn]
+            p, _ = pending.pop(pid)
+            try:
+                status, payload = conn.recv()
+            except (EOFError, OSError):  # a crash, not a hang
+                p.join(timeout=5)
+                errors.append(f"--- process {pid} exited {p.exitcode} "
+                              f"with no result ---")
+                continue
+            if status == "ok":
+                results[pid] = payload
+            else:
+                errors.append(f"--- process {pid} ---\n{payload}")
+        if errors:
+            deadline = min(deadline, time.monotonic() + fail_grace_s)
+    timed_out = sorted(pending)
+    for p in procs:
+        p.join(timeout=5 if not timed_out else 0.5)
+        if p.is_alive():
+            p.terminate()
+            p.join(timeout=5)
+    if errors:
+        if timed_out:
+            errors.append(f"--- processes {timed_out} still pending "
+                          f"{fail_grace_s}s after the first failure "
+                          f"(killed) ---")
+        raise PodWorkerError("spawn_local_pod worker failure:\n"
+                             + "\n".join(errors))
+    if timed_out:
+        raise TimeoutError(
+            f"spawn_local_pod: processes {timed_out} produced no result "
+            f"within {timeout_s}s (killed)")
+    return results
+
+
+# -------------------------------------------------------------- CI smoke ---
+
+def _write_smoke_bundle(path: str, widths=(32, 32)):
+    import jax
+    from repro.nn import MLP
+    from repro.nn.serialize import save_model
+    net = MLP((1, 5), list(widths), 1)
+    params = net.init(jax.random.PRNGKey(7))
+    return save_model(path, net, params)
+
+
+def _smoke_worker(tmp: str, callers_per_host: int = 3,
+                  rows_per_caller: int = 5) -> Dict[str, Any]:
+    """One pod process of the cross-host serve round-trip.
+
+    Every host submits its callers' rows to the *same* queue key, all
+    hosts pod_flush collectively, and each host checks its callers'
+    results bit-identical to single-process (eager, mesh-less) serving
+    of the same rows.
+    """
+    import jax
+    import numpy as np
+
+    from repro.core.engine import InferenceEngine
+    from repro.dist.sharding import use_mesh
+    from repro.launch.mesh import make_pod_mesh
+    from repro.serve import FlushPolicy, ServeQueue
+
+    pid, nproc = jax.process_index(), jax.process_count()
+    bundle = os.path.join(tmp, "surrogate")
+    if pid == 0:
+        _write_smoke_bundle(bundle)
+    barrier("smoke-bundle-ready")
+
+    # every host sees the same deterministic global caller set and owns
+    # a contiguous slice of it
+    rng = np.random.default_rng(1234)
+    full = rng.standard_normal(
+        (nproc * callers_per_host * rows_per_caller, 5)).astype(np.float32)
+    mine = full.reshape(nproc, callers_per_host, rows_per_caller, 5)[pid]
+
+    mesh = make_pod_mesh()
+    queue = ServeQueue(FlushPolicy(max_batch_rows=1 << 30))  # explicit only
+    with use_mesh(mesh, multi_pod=True):
+        futs = [queue.submit(bundle, mine[c]) for c in range(callers_per_host)]
+        queue.pod_flush(bundle)
+    got = [np.asarray(f.result(timeout=120)) for f in futs]
+
+    # single-process reference: the same engine serving eagerly, no mesh
+    eng = InferenceEngine.get(bundle)
+    ref = [np.asarray(eng(mine[c])) for c in range(callers_per_host)]
+    equal = all(np.array_equal(g, r) for g, r in zip(got, ref))
+
+    snap = queue.stats(bundle).snapshot()
+    barrier("smoke-done")
+    return {
+        "pid": pid,
+        "nproc": nproc,
+        "equal": bool(equal),
+        "local_rows": int(callers_per_host * rows_per_caller),
+        "bucket": int(snap["bucket_rows"]),
+        "pod_batches": int(snap["pod_batches"]),
+        "remote_rows": int(snap["remote_rows"]),
+        "global_devices": jax.device_count(),
+    }
+
+
+def run_smoke(processes: int = 2, devices_per_host: int = 2,
+              tmpdir: Optional[str] = None,
+              timeout_s: float = 420.0) -> List[Dict[str, Any]]:
+    """The multi-process CI smoke: spawn_local_pod driving a cross-host
+    serve round-trip.  Raises on any correctness failure; returns the
+    per-process summaries."""
+    tmp = tmpdir or tempfile.mkdtemp(prefix="repro_pod_smoke_")
+    res = spawn_local_pod(processes, "repro.launch.multihost:_smoke_worker",
+                          (tmp,), devices_per_host=devices_per_host,
+                          timeout_s=timeout_s)
+    failures = []
+    for r in res:
+        if not r["equal"]:
+            failures.append(f"p{r['pid']}: results diverge from "
+                            f"single-process serving")
+        if r["pod_batches"] < 1:
+            failures.append(f"p{r['pid']}: no pod batch dispatched")
+        if processes > 1 and r["remote_rows"] <= 0:
+            failures.append(f"p{r['pid']}: mega-batch carried no remote "
+                            f"rows — it did not span the pod axis")
+        if r["bucket"] <= r["local_rows"]:
+            failures.append(f"p{r['pid']}: global bucket {r['bucket']} "
+                            f"does not exceed local rows {r['local_rows']}")
+    for r in res:
+        print(f"[pod-smoke] p{r['pid']}/{r['nproc']} "
+              f"devices={r['global_devices']} bucket={r['bucket']} "
+              f"remote_rows={r['remote_rows']} equal={r['equal']}",
+              flush=True)
+    if failures:
+        raise PodWorkerError("pod smoke FAILED:\n" + "\n".join(failures))
+    print(f"[pod-smoke] OK: {processes} processes, cross-host mega-batch, "
+          f"bit-identical to single-process serving", flush=True)
+    return res
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="spawn_local_pod cross-host serve round-trip")
+    ap.add_argument("--processes", type=int, default=2)
+    ap.add_argument("--devices-per-host", type=int, default=2)
+    args = ap.parse_args()
+    if args.smoke:
+        run_smoke(processes=args.processes,
+                  devices_per_host=args.devices_per_host)
+        return
+    ap.error("nothing to do (pass --smoke)")
+
+
+if __name__ == "__main__":
+    main()

@@ -70,19 +70,43 @@ class Batcher:
                 return InferenceEngine.get(key)
         self._engine_for = engine_for
 
+    @staticmethod
+    def _device_resident(x) -> bool:
+        """True when ``x`` is a committed, fully-addressable jax.Array on
+        a non-host backend.  There the mega-batch should assemble with an
+        on-device concat — the host scratch gather would be a D2H
+        round-trip per request followed by one H2D of the whole batch.
+        On CPU the pooled host gather IS the fast path (measured in PR 3),
+        so plain numpy inputs and CPU arrays keep using it."""
+        if not isinstance(x, jax.Array):
+            return False
+        try:
+            if not x.is_fully_addressable:
+                return False
+            dev = next(iter(x.devices()))
+        except Exception:
+            return False
+        return dev.platform != "cpu"
+
     def _gather(self, requests, n: int, bucket: int):
         """Assemble the mega-batch.
 
-        A lone request rides through untouched (the engine pads it);
-        multiple requests gather into a pooled scratch buffer already
-        padded to the bucket, so the engine skips its own concat+pad
-        and the resulting device array is batcher-owned — safe to
-        donate to the compiled apply.
+        A lone request rides through untouched (the engine pads it).
+        Device-resident inputs concatenate on device — no D2H round-trip;
+        the concat output is batcher-owned and safe to donate.  Host
+        inputs gather into a pooled scratch buffer already padded to the
+        bucket, so the engine skips its own concat+pad.
         """
         if len(requests) == 1:
             return requests[0].x, False
-        feat = requests[0].x.shape[1:]
-        buf = self.scratch.take((bucket,) + tuple(feat),
+        feat = tuple(requests[0].x.shape[1:])
+        if all(self._device_resident(r.x) for r in requests):
+            parts = [r.x for r in requests]
+            if bucket > n:
+                parts.append(jnp.zeros((bucket - n,) + feat,
+                                       requests[0].x.dtype))
+            return jnp.concatenate(parts, axis=0), True
+        buf = self.scratch.take((bucket,) + feat,
                                 np.dtype(requests[0].x.dtype))
         off = 0
         for r in requests:
@@ -91,20 +115,51 @@ class Batcher:
         buf[off:] = 0  # zero padding: same rows a jnp pad would produce
         return jnp.asarray(buf), True
 
-    def _to_host(self, Y) -> np.ndarray:
-        """One device->host gather for the whole mega-batch, landed in a
-        pooled scratch buffer (per-shard zero-copy reads on host-mesh
-        arrays) instead of a fresh allocation per flush.  Futures get
-        row views of the buffer; the pool will not reuse it while any
-        view is alive."""
+    def _to_host(self, Y, *, rows=None) -> np.ndarray:
+        """One device->host gather of rows ``[rows[0], rows[1])`` (default:
+        all) landed in a pooled scratch buffer (per-shard zero-copy reads
+        on host-mesh arrays).  Futures get row views of the buffer; the
+        pool will not reuse it while any view is alive.
+
+        Only *addressable* shards can be read, and that is now enforced:
+        if the local shards do not cover every requested element, this
+        raises instead of returning a buffer whose missing rows are
+        uninitialized pool memory.  Multi-process dispatches must either
+        ask only for the rows this host owns (``dispatch_pod`` passes its
+        slab range) or gather explicitly before landing.
+        """
         try:
             shards = list(Y.addressable_shards)
-        except Exception:
-            return np.asarray(Y)
-        out = self.scratch.take(tuple(Y.shape), np.dtype(Y.dtype))
+        except Exception:  # plain numpy/eager arrays: everything is local
+            arr = np.asarray(Y)
+            return arr if rows is None else arr[rows[0]:rows[1]]
+        n_rows = int(Y.shape[0])
+        start, stop = (0, n_rows) if rows is None else \
+            (int(rows[0]), int(rows[1]))
+        out = self.scratch.take((stop - start,) + tuple(Y.shape[1:]),
+                                np.dtype(Y.dtype))
+        filled = 0
         for s in shards:
-            if getattr(s, "replica_id", 0) == 0:
-                out[s.index] = np.asarray(s.data)
+            if getattr(s, "replica_id", 0) != 0:
+                continue
+            idx = tuple(s.index)
+            i0 = idx[0] if idx else slice(None)
+            s0 = 0 if i0.start is None else int(i0.start)
+            e0 = n_rows if i0.stop is None else int(i0.stop)
+            lo, hi = max(s0, start), min(e0, stop)
+            if lo >= hi:
+                continue
+            block = np.asarray(s.data)[lo - s0:hi - s0]
+            out[(slice(lo - start, hi - start),) + idx[1:]] = block
+            filled += block.size
+        if filled != out.size:
+            raise RuntimeError(
+                f"_to_host: addressable shards cover {filled}/{out.size} "
+                f"elements of rows [{start}, {stop}) of a {Y.shape} "
+                f"output — the rest is owned by other processes.  A "
+                f"multi-process dispatch must read only its own slab "
+                f"(ServeQueue.pod_flush / Batcher.dispatch_pod) or "
+                f"gather the array before landing it.")
         return out
 
     @staticmethod
@@ -167,3 +222,140 @@ class Batcher:
             lats.append(t1 - r.t_enqueue)
         stats.on_batch(requests=len(requests), rows=n, bucket=bucket,
                        reason=reason, busy_s=t1 - t0, latencies_s=lats)
+
+    @staticmethod
+    def _dtype_from_num(num: int):
+        """np.dtype for a type number gathered from a pod peer.
+
+        Type numbers are the only dtype spelling that travels through an
+        integer all-gather; builtins have stable numbers, and extension
+        dtypes (bfloat16) get consistent ones on identical software
+        stacks (CI pins the stack)."""
+        for name in ("float32", "float64", "float16", "int8", "int16",
+                     "int32", "int64", "uint8", "uint16", "uint32",
+                     "uint64", "bool_", "complex64", "complex128"):
+            dt = np.dtype(getattr(np, name))
+            if dt.num == num:
+                return dt
+        try:
+            import ml_dtypes
+            dt = np.dtype(ml_dtypes.bfloat16)
+            if dt.num == num:
+                return dt
+        except ImportError:
+            pass
+        raise ValueError(f"dispatch_pod: unknown dtype num {num} gathered "
+                         f"from a pod peer")
+
+    def _slab_layout(self, requests, eng, agreed_num: int = -1):
+        """(feature shape, dtype) of one slab row.
+
+        From the local requests when this host has any; an idle host
+        derives the feature shape from the engine's bundle spec and the
+        dtype from the pod-agreed type number — every process must hand
+        ``make_array_from_process_local_data`` the same dtype or the
+        global array's avals diverge across the pod."""
+        if requests:
+            return (tuple(requests[0].x.shape[1:]),
+                    np.dtype(requests[0].x.dtype))
+        dtype = (self._dtype_from_num(agreed_num) if agreed_num >= 0
+                 else np.dtype(np.float32))
+        return tuple(eng.spec["in_shape"][1:]), dtype
+
+    def dispatch_pod(self, key: str, requests: List, stats: ServeStats, *,
+                     ctx=None, reason: str = "pod") -> None:
+        """Serve one cross-host mega-batch (collective).
+
+        Every process in the pod must call this at the same point for the
+        same key — it contains collectives.  The hosts agree on a common
+        per-host slab via an all-gather of their pending row counts; each
+        host assembles its slab (its callers' rows + zero padding, sized
+        ``bucket_for(max(counts))`` so slabs match), the slabs form one
+        global batch whose leading dim is sharded over ``("pod", "data")``
+        (``ShardCtx.make_global``), and after the batched apply each host
+        reads back *only its own slab* — which is addressable by
+        construction, so no cross-host result gather ever happens.
+
+        A host with nothing pending still participates (zero slab, no
+        futures): collectives cannot be skipped unilaterally.  ``ctx``
+        overrides the serving ShardCtx for exactly that case — with no
+        local requests there is no submit-time ctx to recover.
+        """
+        from repro.dist.sharding import current_ctx, use_mesh
+        from repro.launch import multihost
+        t0 = time.monotonic()
+        if ctx is None:
+            ctx = requests[0].ctx if requests else current_ctx()
+        local_n = sum(r.n for r in requests)
+        my_num = int(np.dtype(requests[0].x.dtype).num) if requests else -1
+        gathered = multihost.allgather_ints([local_n, my_num])
+        counts, dtype_nums = gathered[:, 0], gathered[:, 1]
+        total = int(counts.sum())
+        if total == 0:
+            return
+        pid, nproc = multihost.process_index(), len(counts)
+        try:
+            if nproc > 1 and (ctx is None or ctx.mesh is None):
+                raise RuntimeError(
+                    "dispatch_pod: cross-process serving needs a pod mesh "
+                    "— submit under use_mesh(make_pod_mesh(), "
+                    "multi_pod=True) or pass ctx=")
+            # hosts with rows must agree on the row dtype; idle hosts
+            # adopt it so every process assembles the same global aval
+            active = {int(c) for c, k in zip(dtype_nums, counts) if k > 0}
+            if len(active) > 1:
+                raise ValueError(
+                    f"dispatch_pod: pod hosts submitted mixed row dtypes "
+                    f"for {key!r} (type nums {sorted(active)})")
+            eng = self._engine_for(key)
+            feat, dtype = self._slab_layout(requests, eng,
+                                            next(iter(active), -1))
+            local_shards = (ctx.local_axis_size("data")
+                            if ctx is not None and ctx.mesh is not None
+                            else 1)
+            per_slab = bucket_for(int(counts.max()), self.min_bucket,
+                                  local_shards)
+            bucket = per_slab * nproc
+            slab = self.scratch.take((per_slab,) + feat, dtype)
+            off = 0
+            for r in requests:
+                slab[off:off + r.n] = np.asarray(r.x)
+                off += r.n
+            slab[off:] = 0
+            if ctx is not None and ctx.mesh is not None:
+                X = ctx.make_global(slab, ("data",) + (None,) * len(feat),
+                                    global_shape=(bucket,) + feat)
+            else:
+                X = jnp.asarray(slab)
+            with (use_mesh(ctx.mesh, ctx.multi_pod) if ctx is not None
+                  else use_mesh(None)):
+                Y = eng.apply_batched(X, min_bucket=self.min_bucket,
+                                      prepadded=True)
+            Y = jax.block_until_ready(Y)
+            if requests:
+                base = pid * per_slab
+                Yh = self._to_host(Y, rows=(base, base + local_n))
+        except Exception as e:
+            for r in requests:
+                r.future.set_exception(e)
+            stats.on_failure(requests=len(requests), rows=local_n,
+                             reason=reason, busy_s=time.monotonic() - t0)
+            if nproc > 1:
+                # pod-fatal: a host that bails after the count all-gather
+                # (bundle read failure, bad dtype, ...) has already
+                # diverged from the collective schedule its peers are
+                # entering — swallowing the error here would leave them
+                # hung in the apply.  Fail loudly so the driver/harness
+                # tears the pod down.
+                raise
+            return
+        t1 = time.monotonic()
+        off = 0
+        lats = []
+        for r in requests:
+            r.future.set_result(Yh[off:off + r.n])
+            off += r.n
+            lats.append(t1 - r.t_enqueue)
+        stats.on_batch(requests=len(requests), rows=local_n, bucket=bucket,
+                       reason=reason, busy_s=t1 - t0, latencies_s=lats,
+                       remote_rows=total - local_n)

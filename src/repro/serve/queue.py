@@ -252,6 +252,47 @@ class ServeQueue:
                 dispatched += rows
         return dispatched
 
+    def pod_flush(self, key: Optional[str] = None, *, ctx=None) -> int:
+        """Collective flush: this host's pending rows join one cross-host
+        mega-batch with every other pod process's rows for ``key``.
+
+        SPMD contract — every process in the pod must call ``pod_flush``
+        at the same point with the same key sequence (with ``key=None``,
+        all hosts must hold the same key set; keys dispatch in sorted
+        order so the collective schedules line up).  A host with nothing
+        pending still participates with a zero slab.  Returns the number
+        of *local* rows dispatched.
+
+        Only thread-free queues may pod-flush: a per-host dispatcher
+        thread firing on its own clock would run the collectives in
+        different orders on different hosts and deadlock the pod.
+        ``ctx`` pins the serving ShardCtx for hosts with no pending
+        requests (otherwise the first request's submit-time ctx governs,
+        as in ordinary dispatch).
+        """
+        with self._cv:
+            if self._thread is not None:
+                raise RuntimeError(
+                    "pod_flush on a started queue: cross-host flushes are "
+                    "collective and must run from the driver loop, not a "
+                    "per-host dispatcher thread (use a thread-free queue)")
+            keys = [key] if key is not None else sorted(self._pending)
+        dispatched = 0
+        for k in keys:
+            with self._cv:
+                reqs = self._pending.pop(k, [])
+                rows = sum(r.n for r in reqs)
+                self._rows_total -= rows
+                st = self._stat_locked(k)
+                if rows:
+                    self._cv.notify_all()  # wake backpressured submitters
+            # always dispatch — a zero-row host still owes the pod its
+            # collectives (dispatch_pod returns early only when *every*
+            # host is empty)
+            self._batcher.dispatch_pod(k, reqs, st, ctx=ctx)
+            dispatched += rows
+        return dispatched
+
     def poll(self) -> int:
         """Flush keys whose max-batch/deadline triggers fired (no thread).
 

@@ -55,6 +55,13 @@ class ServeStats:
         self.rows_failed = 0
         self.bucket_rows = 0      # sum of dispatched (padded) batch sizes
         self.padded_rows = 0
+        # pod-scale serving: batches this key co-served with other hosts,
+        # and how many of those batches' real rows belonged to them.
+        # Local counters stay local-only (rows_completed is what THIS
+        # host's callers got back), so occupancy folds remote rows in —
+        # a well-fed cross-host mega-batch must not read as padding.
+        self.pod_batches = 0
+        self.remote_rows = 0
         self.queue_depth_rows = 0
         self.queue_depth_requests = 0
         self.flush_reasons: Counter = Counter()
@@ -98,13 +105,19 @@ class ServeStats:
             self.busy_s += busy_s
 
     def on_batch(self, *, requests: int, rows: int, bucket: int,
-                 reason: str, busy_s: float, latencies_s) -> None:
+                 reason: str, busy_s: float, latencies_s,
+                 remote_rows: int = 0) -> None:
         with self._lock:
             self.batches += 1
             self.requests_completed += requests
             self.rows_completed += rows
             self.bucket_rows += bucket
-            self.padded_rows += bucket - rows
+            # remote hosts' real rows in a pod mega-batch are useful
+            # work, not padding
+            self.padded_rows += bucket - rows - remote_rows
+            if reason == "pod" or remote_rows:
+                self.pod_batches += 1
+                self.remote_rows += remote_rows
             self.queue_depth_rows -= rows
             self.queue_depth_requests -= requests
             self.flush_reasons[reason] += 1
@@ -156,8 +169,8 @@ class ServeStats:
     def snapshot(self) -> Dict:
         with self._lock:
             lat = sorted(self._lat)
-            occ = (self.rows_completed / self.bucket_rows
-                   if self.bucket_rows else 0.0)
+            occ = ((self.rows_completed + self.remote_rows)
+                   / self.bucket_rows if self.bucket_rows else 0.0)
             rows_per_s = (self.rows_completed / self.busy_s
                           if self.busy_s > 0 else 0.0)
             return {
@@ -172,6 +185,8 @@ class ServeStats:
                 "rows_failed": self.rows_failed,
                 "bucket_rows": self.bucket_rows,
                 "padded_rows": self.padded_rows,
+                "pod_batches": self.pod_batches,
+                "remote_rows": self.remote_rows,
                 "queue_depth_rows": self.queue_depth_rows,
                 "queue_depth_requests": self.queue_depth_requests,
                 "batch_occupancy": occ,

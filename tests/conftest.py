@@ -13,6 +13,13 @@ if SRC not in sys.path:
 if str(ROOT / "tests") not in sys.path:
     sys.path.insert(0, str(ROOT / "tests"))
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: spawns real multi-process jax pods (the multihost CI lane "
+        "runs these; deselect with -m 'not slow' for quick iteration)")
+
+
 try:  # offline image has no hypothesis wheel; shim keeps the suite runnable
     import hypothesis  # noqa: F401
 except ModuleNotFoundError:

@@ -1,0 +1,365 @@
+"""repro.launch.multihost: pod bootstrap, the local-pod spawn harness,
+cross-host mega-batch serving, _to_host addressability enforcement,
+device-resident gather, and multi-process tune-cache write races.
+
+The spawn-based tests fork real ``jax.distributed`` process groups on
+CPU (Gloo collectives) — they are the tier-1-adjacent coverage the
+``multihost`` CI lane runs; everything else here is cheap single-process
+coverage of the same code paths.
+"""
+import json
+import multiprocessing
+import os
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.launch import multihost
+from repro.serve import FlushPolicy, ServeQueue
+from repro.serve.batcher import Batcher
+
+
+# ----------------------------------------------------------- bootstrap -----
+
+def test_bootstrap_single_process_noop(monkeypatch):
+    for var in (multihost.ENV_COORDINATOR, multihost.ENV_NUM_PROCESSES,
+                multihost.ENV_PROCESS_ID, multihost.ENV_LOCAL_DEVICES):
+        monkeypatch.delenv(var, raising=False)
+    info = multihost.bootstrap()
+    assert info == multihost.PodInfo(0, 1, None)
+    assert not info.is_multiprocess
+
+
+def test_bootstrap_multiprocess_requires_coordinator(monkeypatch):
+    monkeypatch.delenv(multihost.ENV_COORDINATOR, raising=False)
+    with pytest.raises(RuntimeError, match="coordinator"):
+        multihost.bootstrap(num_processes=2, process_id=0)
+
+
+def test_allgather_counts_single_process():
+    counts = multihost.allgather_counts(7)
+    assert counts.tolist() == [7]
+    multihost.barrier("noop")  # single-process barrier must not collective
+
+
+def test_spawn_local_pod_rejects_bad_n():
+    with pytest.raises(ValueError):
+        multihost.spawn_local_pod(0, "os:getcwd")
+
+
+def _raising_worker():
+    raise ValueError("worker boom")
+
+
+def _exiting_worker():
+    os._exit(3)
+
+
+def test_spawn_local_pod_worker_exception_not_a_timeout():
+    # a worker that raises must surface as PodWorkerError carrying the
+    # traceback — before the classification fix a dead child was
+    # reported as a 300s timeout
+    with pytest.raises(multihost.PodWorkerError, match="worker boom"):
+        multihost.spawn_local_pod(1, "test_multihost:_raising_worker",
+                                  timeout_s=120.0)
+
+
+def test_spawn_local_pod_crashed_child_reports_exit_code():
+    with pytest.raises(multihost.PodWorkerError, match="exited 3"):
+        multihost.spawn_local_pod(1, "test_multihost:_exiting_worker",
+                                  timeout_s=120.0)
+
+
+def _fail_while_peer_hangs_worker():
+    import time as _time
+    if os.environ.get(multihost.ENV_PROCESS_ID) == "1":
+        raise ValueError("early boom")
+    _time.sleep(120)  # a peer hung in a now-peerless collective
+
+
+@pytest.mark.slow
+def test_spawn_local_pod_fast_failure_not_masked_by_hung_peer():
+    """A worker error must surface within the failure grace window, as a
+    PodWorkerError naming the real exception — not after the full pod
+    timeout as a TimeoutError blaming the consequently-hung peer."""
+    t0 = time.monotonic()
+    with pytest.raises(multihost.PodWorkerError, match="early boom"):
+        multihost.spawn_local_pod(
+            2, "test_multihost:_fail_while_peer_hangs_worker",
+            timeout_s=110.0)
+    assert time.monotonic() - t0 < 90.0  # grace, not the 110s budget
+
+
+# -------------------------------------------------- _to_host enforcement ---
+
+class _Shard:
+    def __init__(self, index, data, replica_id=0):
+        self.index = index
+        self.data = data
+        self.replica_id = replica_id
+
+
+class _FakeGlobal:
+    """Duck-typed global array: only some rows are addressable."""
+
+    def __init__(self, shape, shards, dtype=np.float32):
+        self.shape = shape
+        self.dtype = np.dtype(dtype)
+        self.addressable_shards = shards
+
+
+def _row_shard(full, lo, hi):
+    return _Shard((slice(lo, hi), slice(None)), full[lo:hi])
+
+
+def test_to_host_full_addressability_roundtrips():
+    full = np.arange(32, dtype=np.float32).reshape(8, 4)
+    y = _FakeGlobal((8, 4), [_row_shard(full, 0, 4), _row_shard(full, 4, 8)])
+    out = Batcher()._to_host(y)
+    np.testing.assert_array_equal(out, full)
+
+
+def test_to_host_partial_addressability_raises():
+    # rows 4:8 live on another process: reading them silently returned
+    # uninitialized pool memory before — now it must fail loudly
+    full = np.arange(32, dtype=np.float32).reshape(8, 4)
+    y = _FakeGlobal((8, 4), [_row_shard(full, 0, 4)])
+    with pytest.raises(RuntimeError, match="addressable"):
+        Batcher()._to_host(y)
+
+
+def test_to_host_rows_slice_reads_only_local_slab():
+    # the pod path asks for exactly this host's slab: addressable by
+    # construction even though the rest of the global array is not
+    full = np.arange(32, dtype=np.float32).reshape(8, 4)
+    y = _FakeGlobal((8, 4), [_row_shard(full, 4, 8)])
+    out = Batcher()._to_host(y, rows=(4, 8))
+    np.testing.assert_array_equal(out, full[4:8])
+    with pytest.raises(RuntimeError, match="addressable"):
+        Batcher()._to_host(y, rows=(2, 8))  # 2:4 is remote
+
+
+def test_to_host_replicated_shards_counted_once():
+    full = np.arange(32, dtype=np.float32).reshape(8, 4)
+    y = _FakeGlobal((8, 4), [_row_shard(full, 0, 8),
+                             _Shard((slice(0, 8), slice(None)),
+                                    full, replica_id=1)])
+    out = Batcher()._to_host(y)
+    np.testing.assert_array_equal(out, full)
+
+
+def test_to_host_real_array_unchanged():
+    y = jax.numpy.asarray(np.arange(12, dtype=np.float32).reshape(4, 3))
+    out = Batcher()._to_host(y)
+    np.testing.assert_array_equal(out, np.asarray(y))
+
+
+# ------------------------------------------------- device-resident gather --
+
+class _Req:
+    def __init__(self, x):
+        self.x = x
+        self.n = int(x.shape[0])
+
+
+def test_gather_host_path_uses_scratch_on_cpu():
+    b = Batcher()
+    reqs = [_Req(jax.numpy.ones((3, 2))), _Req(jax.numpy.zeros((2, 2)))]
+    x, owned = b._gather(reqs, 5, 8)
+    assert owned and x.shape == (8, 2)
+    assert b.scratch.misses > 0  # assembled in the pooled host buffer
+    np.testing.assert_array_equal(
+        np.asarray(x),
+        np.concatenate([np.ones((3, 2)), np.zeros((2, 2)),
+                        np.zeros((3, 2))]).astype(np.float32))
+
+
+def test_gather_device_resident_concats_on_device(monkeypatch):
+    # no accelerator in CI: force the device-resident branch and check it
+    # produces the same padded batch without touching the host pool
+    monkeypatch.setattr(Batcher, "_device_resident",
+                        staticmethod(lambda x: True))
+    b = Batcher()
+    reqs = [_Req(jax.numpy.ones((3, 2))), _Req(jax.numpy.zeros((2, 2)))]
+    x, owned = b._gather(reqs, 5, 8)
+    assert owned and x.shape == (8, 2)
+    assert b.scratch.misses == 0 and b.scratch.hits == 0
+    np.testing.assert_array_equal(
+        np.asarray(x),
+        np.concatenate([np.ones((3, 2)), np.zeros((2, 2)),
+                        np.zeros((3, 2))]).astype(np.float32))
+
+
+def test_device_resident_false_for_numpy_and_cpu():
+    assert not Batcher._device_resident(np.ones((2, 2)))
+    assert not Batcher._device_resident(jax.numpy.ones((2, 2)))  # cpu array
+
+
+# ------------------------------------------- pod_flush (single process) ----
+
+def _bundle(tmp, seed=0):
+    from repro.nn import MLP
+    from repro.nn.serialize import save_model
+    net = MLP((1, 2), [16], 1)
+    return save_model(tmp / "m", net, net.init(jax.random.PRNGKey(seed)))
+
+
+def _rows(n, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, 2)).astype(np.float32)
+
+
+def test_pod_flush_single_process_matches_sync(tmp_path):
+    from repro.core.engine import InferenceEngine
+    mp_path = _bundle(tmp_path)
+    q = ServeQueue(FlushPolicy(max_batch_rows=1 << 30))
+    xs = [_rows(5, s) for s in range(3)]
+    futs = [q.submit(mp_path, x) for x in xs]
+    assert q.pod_flush(mp_path) == 15
+    eng = InferenceEngine.get(mp_path)
+    for f, x in zip(futs, xs):
+        np.testing.assert_array_equal(np.asarray(f.result(timeout=30)),
+                                      np.asarray(eng(x)))
+    snap = q.stats(mp_path).snapshot()
+    assert snap["pod_batches"] == 1 and snap["remote_rows"] == 0
+    assert snap["queue_depth_rows"] == 0
+
+
+def test_pod_flush_empty_is_noop(tmp_path):
+    q = ServeQueue(FlushPolicy())
+    assert q.pod_flush(str(tmp_path / "missing")) == 0
+
+
+def test_pod_flush_rejects_started_queue(tmp_path):
+    q = ServeQueue(FlushPolicy(max_delay_s=10.0)).start()
+    try:
+        with pytest.raises(RuntimeError, match="thread"):
+            q.pod_flush("anything")
+    finally:
+        q.stop()
+
+
+# ------------------------------------------------ spawned pod substrate ----
+
+def _substrate_worker():
+    """Runs inside a spawned pod process: collective + ShardCtx checks."""
+    import jax
+    import numpy as np
+
+    from repro.dist.sharding import ShardCtx
+    from repro.launch import multihost
+    from repro.launch.mesh import make_pod_mesh
+
+    pid, nproc = jax.process_index(), jax.process_count()
+    mesh = make_pod_mesh()
+    ctx = ShardCtx(mesh, multi_pod=True)
+    counts = multihost.allgather_counts(pid + 3)
+    # per-host feeding: each host contributes 2 distinct rows
+    local = (np.full((2, 3), pid, np.float32)
+             + np.arange(2, dtype=np.float32)[:, None] * 0.5)
+    g = ctx.make_global(local, ("data", None),
+                        global_shape=(2 * nproc, 3))
+    y = jax.block_until_ready(jax.jit(lambda v: v + 1.0)(g))
+    mine = {int(s.index[0].start): np.asarray(s.data)[:, 0].tolist()
+            for s in y.addressable_shards
+            if getattr(s, "replica_id", 0) == 0}
+    multihost.barrier("substrate-done")
+    return {
+        "pid": pid, "nproc": nproc,
+        "global_devices": jax.device_count(),
+        "local_devices": jax.local_device_count(),
+        "counts": counts.tolist(),
+        "data_size": ctx.axis_size("data"),
+        "local_data_size": ctx.local_axis_size("data"),
+        "spec": str(ctx.spec_for((8, 4), ("data", None))),
+        "fully_addressable": bool(g.is_fully_addressable),
+        "mine": mine,
+    }
+
+
+@pytest.mark.slow
+def test_spawn_local_pod_substrate():
+    res = multihost.spawn_local_pod(
+        2, "test_multihost:_substrate_worker", devices_per_host=2,
+        timeout_s=300.0)
+    assert [r["pid"] for r in res] == [0, 1]
+    for r in res:
+        assert r["nproc"] == 2
+        assert r["global_devices"] == 4 and r["local_devices"] == 2
+        assert r["counts"] == [3, 4]  # pid 0 sent 3, pid 1 sent 4
+        # "data" resolves across the pod: pod(2) x data(2) shards
+        assert r["data_size"] == 4 and r["local_data_size"] == 2
+        assert r["spec"] == str(
+            jax.sharding.PartitionSpec(("pod", "data"), None))
+        assert not r["fully_addressable"]  # a real cross-process array
+    # each host's addressable shards are exactly its own contributed rows
+    assert sorted(res[0]["mine"]) == [0, 1]
+    assert sorted(res[1]["mine"]) == [2, 3]
+    assert res[0]["mine"][0][0] == pytest.approx(1.0)   # 0 + 1.0
+    assert res[1]["mine"][2][0] == pytest.approx(2.0)   # 1 + 1.0
+
+
+@pytest.mark.slow
+def test_cross_host_serve_round_trip(tmp_path):
+    """The CI acceptance smoke: two processes feed one queue key, the
+    flushed mega-batch spans the pod axis, per-caller results are
+    bit-identical to single-process serving."""
+    res = multihost.run_smoke(processes=2, devices_per_host=2,
+                              tmpdir=str(tmp_path))
+    for r in res:
+        assert r["equal"]
+        assert r["remote_rows"] == 15      # the other host's 3x5 rows
+        assert r["bucket"] == 32           # per-slab 16 x 2 hosts
+        assert r["pod_batches"] == 1
+
+
+# ----------------------------------------- tune-cache concurrent writes ----
+
+def _cache_writer(path, wid, n_puts):
+    """Plain-multiprocessing worker (no jax): hammer one cache file."""
+    from repro.tune.cache import TuneCache
+    c = TuneCache("fused_mlp", path=path)
+    for i in range(n_puts):
+        c.put(f"w{wid}-k{i % 5}",
+              {"params": {"batch_tile": 32 + wid}, "us": float(i),
+               "default_us": 1.0, "speedup_x": 1.0, "exact": True,
+               "swept": []})
+
+
+def test_tune_cache_concurrent_writes_never_corrupt(tmp_path):
+    """Two processes racing puts on one artifacts/tune/<kernel>.json:
+    every intermediate and the final file must be a valid schema-2
+    cache (the atomic tmp+rename write), never a torn JSON."""
+    path = str(tmp_path / "fused_mlp.json")
+    ctx = multiprocessing.get_context("spawn")
+    procs = [ctx.Process(target=_cache_writer, args=(path, w, 30))
+             for w in range(2)]
+    for p in procs:
+        p.start()
+    seen_valid = 0
+    # poll the file while the race runs: a torn write would surface as a
+    # JSON parse error here
+    while any(p.is_alive() for p in procs):
+        if os.path.exists(path):
+            try:
+                data = json.loads(open(path).read())
+            except ValueError as e:  # pragma: no cover - the regression
+                for p in procs:
+                    p.terminate()
+                raise AssertionError(f"torn tune-cache file: {e}")
+            assert data.get("schema") == 2
+            seen_valid += 1
+    for p in procs:
+        p.join(timeout=30)
+        assert p.exitcode == 0
+    data = json.loads(open(path).read())
+    assert data["schema"] == 2 and data["kernel"] == "fused_mlp"
+    # last-writer-wins per file is acceptable; corruption is not — every
+    # surviving record must be a well-formed winner
+    assert data["entries"]
+    from repro.tune.cache import TuneCache
+    c = TuneCache("fused_mlp", path=path)
+    for key, rec in c.entries().items():
+        assert rec["exact"] and rec["params"]["batch_tile"] in (32, 33)
+    assert seen_valid > 0
