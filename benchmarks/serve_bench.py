@@ -25,12 +25,20 @@ if __name__ == "__main__":  # must precede the first jax import
         "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import argparse
+import json
+import pathlib
 import time
 
 import jax
 import numpy as np
 
 CHECK_SPEEDUP = 3.0
+#: instrumentation gate: tracing ON must keep >= this fraction of the
+#: tracing-OFF rows/s (interleaved-pair median ratio, drift-immune)
+OVERHEAD_MIN_RATIO = 0.98
+#: a sampled request's spans must cover >= this much of its measured
+#: enqueue->resolve window (no unaccounted gaps)
+TRACE_MIN_COVERAGE = 0.95
 
 
 def _bundle(path):
@@ -180,6 +188,123 @@ def latency_model_rows(ad_queue, mp):
     return rows
 
 
+def export_trace(path) -> None:
+    """Write the Chrome trace + metrics artifacts and gate span coverage.
+
+    The trace must account for each sampled request's whole
+    enqueue->resolve window: queue.submit + serve.request tile it by
+    construction, so any request whose union coverage drops below
+    :data:`TRACE_MIN_COVERAGE` means an instrumentation gap crept into
+    the serve path.
+    """
+    from repro.obs import TRACER, default_registry, request_coverage
+    path = pathlib.Path(path)
+    events = TRACER.export_chrome_trace(path)
+    # sampled = requests whose span set is complete in the ring (the ring
+    # evicts oldest-first, so early-warmup requests may be partial)
+    full = {t for t in
+            ( (e.get("args") or {}).get("trace") for e in events
+              if e["name"] == "queue.submit" )
+            if t is not None}
+    cov = {t: c for t, c in request_coverage(events).items()
+           if t in full and c["spans"] >= 2}
+    if not cov:
+        raise SystemExit("--trace: no fully-sampled request in the trace "
+                         "(ring too small for this workload?)")
+    worst = min(cov.values(), key=lambda c: c["coverage"])
+    metrics = default_registry()
+    path.with_suffix(".metrics.json").write_text(
+        json.dumps(metrics.collect(), indent=1))
+    path.with_suffix(".prom").write_text(metrics.dump())
+    print(f"[serve trace] {len(events)} events -> {path}; "
+          f"{len(cov)} sampled requests, worst coverage "
+          f"{worst['coverage']:.3f} over {worst['window_us']:.0f}us",
+          flush=True)
+    if worst["coverage"] < TRACE_MIN_COVERAGE:
+        raise SystemExit(
+            f"--trace FAILED: worst request coverage {worst['coverage']:.3f}"
+            f" < {TRACE_MIN_COVERAGE} (unaccounted gap in the serve path)")
+
+
+def overhead_check(fast=False, pairs=50):
+    """Gate instrumentation cost: tracing on vs off, interleaved pairs.
+
+    Runs the coalesced serve path (the instrumented hot path) with the
+    tracer toggled every other run; the gate compares the *minimum* off
+    time against the minimum on time.  Scheduler noise only ever adds
+    time, so each minimum estimates that path's true cost; the tight
+    interleave guarantees both sets sample the same machine conditions
+    (a sequential off-block/on-block comparison is dominated by drift —
+    measured, the drift between two such blocks exceeds the effect being
+    gated); and the within-pair order alternates each pair because the
+    second run of a pair measures systematically slower than the first
+    (also larger than the effect under test).  GC is paused during
+    timing, as ``timeit`` does.  Fails below :data:`OVERHEAD_MIN_RATIO`.
+    """
+    import gc
+    import tempfile
+
+    from repro.dist.sharding import use_mesh
+    from repro.launch.mesh import make_local_mesh
+    from repro.obs import TRACER, disable_tracing, enable_tracing
+    from repro.serve import FlushPolicy, ServeQueue
+
+    n_callers = 16 if fast else 32
+    rows_per_call = 8
+    total = n_callers * rows_per_call
+    tmp = pathlib.Path(tempfile.mkdtemp(prefix="serve_obs_bench_"))
+    mp = _bundle(tmp / "surrogate")
+    mesh = make_local_mesh((len(jax.devices()), 1))
+    queue = ServeQueue(FlushPolicy(max_batch_rows=total,
+                                   max_pending_rows=4 * total))
+    rng = np.random.default_rng(3)
+    chunks = [rng.standard_normal((rows_per_call, 5)).astype(np.float32)
+              for _ in range(n_callers)]
+
+    def run_once():
+        futs = [queue.submit(mp, c) for c in chunks]
+        queue.flush(mp, reason="bench")
+        for f in futs:
+            f.result(30)
+
+    was_enabled = TRACER.enabled
+    offs, ons = [], []
+    try:
+        with use_mesh(mesh):
+            disable_tracing()
+            _measure(run_once, reps=1, warmup=3)  # compile outside timing
+            gc.disable()
+            try:
+                for i in range(pairs):
+                    halves = [(False, offs), (True, ons)]
+                    if i % 2:
+                        halves.reverse()
+                    for on, times in halves:
+                        enable_tracing() if on else disable_tracing()
+                        t0 = time.perf_counter()
+                        run_once()
+                        times.append(time.perf_counter() - t0)
+                    if i % 10 == 9:  # bound ring/heap growth, untimed
+                        TRACER.clear()
+                        gc.collect()
+            finally:
+                gc.enable()
+            TRACER.clear()
+    finally:
+        TRACER.enabled = was_enabled
+    ratio = min(offs) / min(ons)
+    print(f"[serve obs overhead] traced serving retains "
+          f"{ratio * 100:.1f}% of untraced rows/s over {pairs} "
+          f"interleaved pairs (off {min(offs) * 1e3:.3f}ms / on "
+          f"{min(ons) * 1e3:.3f}ms)", flush=True)
+    if ratio < OVERHEAD_MIN_RATIO:
+        raise SystemExit(
+            f"obs overhead gate FAILED: traced/untraced rows/s "
+            f"ratio {ratio:.3f} < {OVERHEAD_MIN_RATIO} (instrumentation "
+            f"costs more than {100 * (1 - OVERHEAD_MIN_RATIO):.0f}%)")
+    return ratio
+
+
 def _markdown(rows, model_err):
     kv = dict(item.split("=", 1) for item in rows[0][2].split(";"))
     out = ["### Serving throughput (8-device host mesh)", "",
@@ -208,8 +333,23 @@ def main():
                     help="print markdown tables incl. the per-bucket "
                          "measured-vs-roofline latency error "
                          "(for EXPERIMENTS.md)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="run with tracing on, write the Chrome trace + "
+                         "metrics snapshots to PATH(.metrics.json/.prom) "
+                         "and fail unless every sampled request's spans "
+                         f"cover >= {TRACE_MIN_COVERAGE:.0%} of its "
+                         "enqueue->resolve latency")
+    ap.add_argument("--overhead-check", action="store_true",
+                    help="gate instrumentation cost: tracing on must "
+                         f"retain >= {OVERHEAD_MIN_RATIO:.0%} of untraced "
+                         "rows/s (interleaved-pair median ratio)")
     args = ap.parse_args()
+    if args.trace:
+        from repro.obs import enable_tracing
+        enable_tracing()
     rows, model_err = serving_throughput_full(fast=args.fast)
+    if args.trace:
+        export_trace(args.trace)
     if args.markdown:
         print(_markdown(rows, model_err))
     else:
@@ -225,6 +365,8 @@ def main():
                 f"serving smoke FAILED: speedup_x={speedup:.2f} "
                 f"(need >= {CHECK_SPEEDUP}) bitwise_equal={same}")
         print(f"[serve smoke] OK: {speedup:.2f}x coalesced over per-call")
+    if args.overhead_check:
+        overhead_check(fast=args.fast)
 
 
 if __name__ == "__main__":

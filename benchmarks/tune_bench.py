@@ -298,10 +298,30 @@ def main():
                     help="re-sweep even if the tune cache has entries")
     ap.add_argument("--markdown", action="store_true",
                     help="print markdown tables (for EXPERIMENTS.md)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="run with tracing on and write the Chrome trace "
+                         "+ metrics snapshots to PATH(.metrics.json/.prom) "
+                         "— controller decisions, tune-cache hit/miss and "
+                         "kernel-dispatch provenance all land in the "
+                         "metrics dump")
     args = ap.parse_args()
+    if args.trace:
+        from repro.obs import enable_tracing
+        enable_tracing()
 
     krows = kernel_rows(fast=args.fast, force=args.force)
     srows, results = serving_rows(fast=args.fast)
+    if args.trace:
+        import json
+        import pathlib
+
+        from repro.obs import TRACER, default_registry
+        path = pathlib.Path(args.trace)
+        events = TRACER.export_chrome_trace(path)
+        path.with_suffix(".metrics.json").write_text(
+            json.dumps(default_registry().collect(), indent=1))
+        path.with_suffix(".prom").write_text(default_registry().dump())
+        print(f"[tune trace] {len(events)} events -> {path}", flush=True)
     if args.markdown:
         print(_markdown(krows, results))
     else:

@@ -45,6 +45,7 @@ def _mute_donation_warning_off_tpu():
 
 from repro.dist.sharding import constrain, current_ctx
 from repro.nn.serialize import load_model
+from repro.obs import TRACER
 
 
 def _bundle_mtime(path: str) -> tuple:
@@ -74,6 +75,10 @@ class InferenceEngine:
         # resolved NamedSharding per (shape, mesh, multi_pod): spec_for is
         # pure python over every dim and was re-run on every eager call
         self._shardings: dict = {}
+        # (apply id, batch shape) pairs already executed once: a batched
+        # apply whose pair is unseen is paying its jit compile, and the
+        # obs span marks it so — compile spikes stop looking like serving
+        self._seen_shapes: set = set()
         self._load()
 
     def _load(self):
@@ -85,6 +90,7 @@ class InferenceEngine:
         self._mtime = _bundle_mtime(self.path)
         self._applies.clear()
         self._shardings.clear()
+        self._seen_shapes.clear()
 
     @classmethod
     def get(cls, model_path) -> "InferenceEngine":
@@ -249,7 +255,18 @@ class InferenceEngine:
         if isinstance(x, jax.core.Tracer):
             donate = False  # in-trace degrade: nothing to donate
         fn = self._apply_for(ctx, donate=donate)
-        y = fn(self.params, self._place(x, ctx))
+        x = self._place(x, ctx)
+        if TRACER.enabled and not isinstance(x, jax.core.Tracer):
+            shape_key = (id(fn), tuple(x.shape))
+            first = shape_key not in self._seen_shapes
+            with TRACER.span("engine.apply", cat="engine",
+                             args={"path": self.path, "rows": n,
+                                   "bucket": int(x.shape[0]),
+                                   "donate": donate, "compile": first}):
+                y = fn(self.params, x)
+            self._seen_shapes.add(shape_key)
+        else:
+            y = fn(self.params, x)
         # a full-bucket batch (the pod path's pre-padded global arrays)
         # skips the slice: slicing a non-addressable array outside jit
         # raises, and [:n] of n rows is the identity anyway

@@ -36,6 +36,14 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 
+from repro.obs import TRACER
+from repro.obs import metrics as _m
+
+_DISPATCHES = _m.counter(
+    "repro_kernel_dispatch_total",
+    "kernel dispatches by resolved-params provenance",
+    ("kernel", "provenance"))
+
 # ------------------------------------------------------------ VMEM budget ---
 # Every shipping TPU generation (v2 through v6e) exposes ~16 MiB of VMEM
 # per TensorCore (see the TPU memory-hierarchy docs), so the kind-keyed
@@ -196,25 +204,48 @@ def tuned_params(spec: KernelSpec, problem: dict) -> Dict[str, int]:
         return {}
 
 
-def resolve_params(spec: KernelSpec, problem: dict,
-                   overrides: Optional[dict] = None) -> Dict[str, int]:
+def resolve_params_info(spec: KernelSpec, problem: dict,
+                        overrides: Optional[dict] = None
+                        ) -> Tuple[Dict[str, int], str]:
     """Merge explicit overrides > tuned winners > spec defaults, then
     re-check the result against the VMEM cost model — a tuned (or
     caller-supplied) config that would overflow *this* device's budget
-    falls back to the defaults."""
+    falls back to the defaults.
+
+    Returns ``(params, provenance)``; the provenance string (one of
+    ``explicit``/``tuned``/``default``/``default:vmem-fallback``, the
+    first two mixed as ``explicit+tuned``) is what the obs layer records
+    per dispatch, so a trace shows whether a kernel ran its sweep winner
+    or silently fell back.
+    """
     overrides = {k: v for k, v in (overrides or {}).items() if v is not None}
     tuned = None
     params: Dict[str, int] = {}
+    sources = set()
     for p in spec.params:
         if p.name in overrides:
             params[p.name] = int(overrides[p.name])
+            sources.add("explicit")
             continue
         if tuned is None:
             tuned = tuned_params(spec, problem)
-        params[p.name] = int(tuned.get(p.name, p.default))
+        if p.name in tuned:
+            params[p.name] = int(tuned[p.name])
+            sources.add("tuned")
+        else:
+            params[p.name] = p.default
+            sources.add("default")
+    provenance = "+".join(s for s in ("explicit", "tuned", "default")
+                          if s in sources) or "default"
     if spec.fits is not None and params and not spec.fits(problem, params):
         params = spec.defaults()
-    return params
+        provenance = "default:vmem-fallback"
+    return params, provenance
+
+
+def resolve_params(spec: KernelSpec, problem: dict,
+                   overrides: Optional[dict] = None) -> Dict[str, int]:
+    return resolve_params_info(spec, problem, overrides)[0]
 
 
 def dispatch(spec: KernelSpec, problem: dict, arrays: tuple, *,
@@ -230,8 +261,21 @@ def dispatch(spec: KernelSpec, problem: dict, arrays: tuple, *,
     if use_kernel and spec.supports is not None:
         use_kernel = bool(spec.supports(problem))
     if not use_kernel:
+        _DISPATCHES.inc(1, kernel=spec.name, provenance="ref")
+        if TRACER.enabled:
+            TRACER.instant("kernel.dispatch", cat="kernel",
+                           args={"kernel": spec.name, "path": "ref"})
         return spec.ref_call(problem, arrays)
-    params = resolve_params(spec, problem, overrides)
+    params, provenance = resolve_params_info(spec, problem, overrides)
+    # dispatch() runs at jit trace time, so this lands once per compiled
+    # shape, not once per serving call — an instant, not a span, because
+    # kernel wall time belongs to XLA's own profile
+    _DISPATCHES.inc(1, kernel=spec.name, provenance=provenance)
+    if TRACER.enabled:
+        TRACER.instant("kernel.dispatch", cat="kernel",
+                       args={"kernel": spec.name, "params": dict(params),
+                             "provenance": provenance,
+                             "interpret": not on_tpu})
     return spec.run_call(problem, arrays, params, interpret=not on_tpu)
 
 

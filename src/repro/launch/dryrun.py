@@ -268,6 +268,11 @@ def main():
                          "the multi-process counterpart of --smoke's "
                          "single-process 512-device fiction")
     ap.add_argument("--pod-processes", type=int, default=2)
+    ap.add_argument("--obs", action="store_true",
+                    help="with --pod-smoke: run the pod with tracing on, "
+                         "all-gather every host's spans/metrics "
+                         "(obs.pod_snapshot) and write the merged Chrome "
+                         "trace to artifacts/obs/pod_trace.json")
     ap.add_argument("--tune", action="store_true",
                     help="pre-populate the kernel autotune cache for the "
                          "serve-path shapes (see repro.tune)")
@@ -293,8 +298,15 @@ def main():
         # children build their own device view (spawn_local_pod overrides
         # XLA_FLAGS per child); the parent never initializes jax here
         from repro.launch.multihost import run_smoke as run_pod_smoke
-        run_pod_smoke(processes=args.pod_processes)
+        obs_out = None
+        if args.obs:
+            obs_out = str(ARTIFACTS.parent / "obs" / "pod_trace.json")
+        run_pod_smoke(processes=args.pod_processes, obs_out=obs_out)
         return
+
+    if args.obs:
+        ap.error("--obs needs --pod-smoke (the flight recorder is a pod "
+                 "collective)")
 
     if args.smoke:
         run_smoke(outdir, force=args.force)

@@ -170,6 +170,32 @@ def allgather_counts(n: int):
     return allgather_ints([n])[:, 0]
 
 
+def allgather_bytes(data: bytes) -> List[bytes]:
+    """Every process's ``data`` blob, ordered by process id.
+
+    Variable-length payloads over the int collective the pod already
+    has: the hosts agree on lengths first (one :func:`allgather_ints`),
+    pad to the max, gather the padded byte matrix as int32, and slice
+    each row back to its real length.  This is the transport under
+    ``repro.obs.pod_snapshot`` — spans/metrics serialize to JSON bytes
+    and ride it across the pod.  Collective (same contract as
+    ``allgather_ints``); single-process returns ``[data]``.
+    """
+    import numpy as np
+    if not is_multiprocess():
+        return [bytes(data)]
+    lengths = allgather_ints([len(data)])[:, 0]
+    m = int(lengths.max())
+    if m == 0:
+        return [b""] * len(lengths)
+    padded = np.zeros((m,), np.int32)
+    padded[:len(data)] = np.frombuffer(bytes(data), np.uint8)
+    from jax.experimental import multihost_utils
+    g = np.asarray(multihost_utils.process_allgather(padded))
+    g = g.reshape(process_count(), m).astype(np.uint8)
+    return [g[i, :int(lengths[i])].tobytes() for i in range(len(lengths))]
+
+
 def barrier(tag: str = "repro-pod") -> None:
     """Block until every pod process reaches this point (no-op solo)."""
     if not is_multiprocess():
@@ -369,8 +395,7 @@ def _smoke_worker(tmp: str, callers_per_host: int = 3,
     equal = all(np.array_equal(g, r) for g, r in zip(got, ref))
 
     snap = queue.stats(bundle).snapshot()
-    barrier("smoke-done")
-    return {
+    out = {
         "pid": pid,
         "nproc": nproc,
         "equal": bool(equal),
@@ -380,18 +405,35 @@ def _smoke_worker(tmp: str, callers_per_host: int = 3,
         "remote_rows": int(snap["remote_rows"]),
         "global_devices": jax.device_count(),
     }
+    from repro.obs import TRACER, pod_snapshot
+    if TRACER.enabled:
+        # flight-recorder pass: all-gather every host's spans/metrics
+        # (collective, so it must run before the final barrier on every
+        # host) — each worker returns the merged pod view, letting the
+        # parent write one trace artifact without its own jax runtime
+        out["obs"] = pod_snapshot()
+    barrier("smoke-done")
+    return out
 
 
 def run_smoke(processes: int = 2, devices_per_host: int = 2,
               tmpdir: Optional[str] = None,
-              timeout_s: float = 420.0) -> List[Dict[str, Any]]:
+              timeout_s: float = 420.0,
+              obs_out: Optional[str] = None) -> List[Dict[str, Any]]:
     """The multi-process CI smoke: spawn_local_pod driving a cross-host
     serve round-trip.  Raises on any correctness failure; returns the
-    per-process summaries."""
+    per-process summaries.
+
+    ``obs_out`` turns the pod into a flight recorder: children run with
+    tracing on, every host's spans/metrics are all-gathered in-pod
+    (``obs.pod_snapshot``), and the merged Chrome trace lands at
+    ``obs_out`` (open in Perfetto; each host is one pid track).
+    """
     tmp = tmpdir or tempfile.mkdtemp(prefix="repro_pod_smoke_")
+    extra_env = {"REPRO_TRACE": "1"} if obs_out else None
     res = spawn_local_pod(processes, "repro.launch.multihost:_smoke_worker",
                           (tmp,), devices_per_host=devices_per_host,
-                          timeout_s=timeout_s)
+                          timeout_s=timeout_s, extra_env=extra_env)
     failures = []
     for r in res:
         if not r["equal"]:
@@ -412,6 +454,14 @@ def run_smoke(processes: int = 2, devices_per_host: int = 2,
               flush=True)
     if failures:
         raise PodWorkerError("pod smoke FAILED:\n" + "\n".join(failures))
+    if obs_out:
+        # process 0's gathered snapshots already hold every host's view;
+        # the merge is jax-free so the parent harness can write it
+        from repro.obs import merge_pod_trace
+        snapshots = (res[0] or {}).get("obs") or []
+        merged = merge_pod_trace(snapshots, obs_out)
+        print(f"[pod-smoke] obs: merged {len(merged)} events from "
+              f"{len(snapshots)} hosts -> {obs_out}", flush=True)
     print(f"[pod-smoke] OK: {processes} processes, cross-host mega-batch, "
           f"bit-identical to single-process serving", flush=True)
     return res
@@ -424,10 +474,14 @@ def main() -> None:
                     help="spawn_local_pod cross-host serve round-trip")
     ap.add_argument("--processes", type=int, default=2)
     ap.add_argument("--devices-per-host", type=int, default=2)
+    ap.add_argument("--obs", default=None, metavar="PATH",
+                    help="flight recorder: run the pod with tracing on "
+                         "and write the merged Chrome trace to PATH")
     args = ap.parse_args()
     if args.smoke:
         run_smoke(processes=args.processes,
-                  devices_per_host=args.devices_per_host)
+                  devices_per_host=args.devices_per_host,
+                  obs_out=args.obs)
         return
     ap.error("nothing to do (pass --smoke)")
 

@@ -1,0 +1,23 @@
+"""Observability for the serving stack: tracing, metrics, pod snapshots.
+
+Import surface is deliberately flat — instrumented modules do
+``from repro.obs import TRACER, metrics`` and nothing else.  This
+package imports nothing from ``repro.serve``/``repro.tune``/
+``repro.kernels`` (they import *us*), and defers every jax import, so
+it is safe at any layer including ``launch.multihost`` pre-bootstrap.
+"""
+from .trace import (TRACER, Span, Tracer, disable_tracing, enable_tracing,
+                    export_chrome_trace, get_tracer, merge_chrome_traces,
+                    request_coverage, tracing_enabled)
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      default_registry, note_static_fallback, warn_once)
+from .pod import local_snapshot, merge_pod_trace, pod_snapshot
+
+__all__ = [
+    "TRACER", "Span", "Tracer", "enable_tracing", "disable_tracing",
+    "tracing_enabled", "get_tracer", "export_chrome_trace",
+    "merge_chrome_traces", "request_coverage",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "default_registry",
+    "warn_once", "note_static_fallback",
+    "local_snapshot", "pod_snapshot", "merge_pod_trace",
+]

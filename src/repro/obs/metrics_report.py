@@ -1,0 +1,123 @@
+"""Render a metrics snapshot (and optionally a trace) as markdown.
+
+    PYTHONPATH=src python -m repro.obs.metrics_report \
+        --metrics artifacts/obs/serve_metrics.json --markdown
+
+Input is the JSON form of ``MetricsRegistry.collect()`` (what
+``serve_bench --trace`` writes next to the trace, and what each entry of
+``pod_snapshot()`` carries under ``"metrics"``).  With ``--trace`` it
+also summarizes span time by name — the quick "where did the batch go"
+table without opening Perfetto.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import Dict, List
+
+
+def _fmt(v: float) -> str:
+    return f"{v:g}"
+
+
+def _labels(d: dict) -> str:
+    return ", ".join(f"{k}={v}" for k, v in sorted(d.items())) or "-"
+
+
+def render_metrics_markdown(collected: Dict[str, dict]) -> str:
+    lines: List[str] = []
+    scalars = [(n, m) for n, m in sorted(collected.items())
+               if m.get("type") in ("counter", "gauge")]
+    if scalars:
+        lines += ["| metric | type | labels | value |",
+                  "|---|---|---|---|"]
+        for name, m in scalars:
+            for v in m.get("values", []):
+                lines.append(f"| {name} | {m['type']} | "
+                             f"{_labels(v.get('labels', {}))} | "
+                             f"{_fmt(v.get('value', 0))} |")
+        lines.append("")
+    hists = [(n, m) for n, m in sorted(collected.items())
+             if m.get("type") == "histogram"]
+    for name, m in hists:
+        lines.append(f"**{name}**")
+        lines.append("")
+        lines += ["| labels | count | sum | mean | p50 bucket | p99 bucket |",
+                  "|---|---|---|---|---|---|"]
+        for v in m.get("values", []):
+            count = v.get("count", 0)
+            total = v.get("sum", 0.0)
+            mean = total / count if count else 0.0
+            buckets = {float(k): c for k, c in
+                       (v.get("buckets") or {}).items()}
+            p50 = _quantile_bucket(buckets, count, 0.50)
+            p99 = _quantile_bucket(buckets, count, 0.99)
+            lines.append(f"| {_labels(v.get('labels', {}))} | {count} | "
+                         f"{_fmt(total)} | {_fmt(mean)} | {p50} | {p99} |")
+        lines.append("")
+    return "\n".join(lines)
+
+
+def _quantile_bucket(buckets: Dict[float, int], count: int, q: float) -> str:
+    """Upper bound of the first bucket whose cumulative count reaches
+    the quantile (explicit buckets only bound quantiles, not pin them)."""
+    if not count:
+        return "-"
+    target = q * count
+    for le in sorted(buckets):
+        if buckets[le] >= target:
+            return f"<={le:g}s"
+    return ">last"
+
+
+def render_trace_markdown(events: List[dict]) -> str:
+    agg: Dict[str, List[float]] = {}
+    for ev in events:
+        if ev.get("ph") != "X":
+            continue
+        agg.setdefault(ev["name"], []).append(ev.get("dur", 0.0))
+    lines = ["| span | count | total ms | mean us |", "|---|---|---|---|"]
+    for name in sorted(agg, key=lambda n: -sum(agg[n])):
+        durs = agg[name]
+        lines.append(f"| {name} | {len(durs)} | {sum(durs) / 1e3:.3f} | "
+                     f"{sum(durs) / len(durs):.1f} |")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.obs.metrics_report",
+        description="render obs metrics/trace snapshots as markdown")
+    ap.add_argument("--metrics", type=pathlib.Path, default=None,
+                    help="JSON file holding MetricsRegistry.collect() "
+                         "output (or a pod_snapshot list)")
+    ap.add_argument("--trace", type=pathlib.Path, default=None,
+                    help="Chrome trace JSON to summarize by span name")
+    ap.add_argument("--markdown", action="store_true",
+                    help="render markdown (default and only format)")
+    args = ap.parse_args(argv)
+    if args.metrics is None and args.trace is None:
+        ap.error("need --metrics and/or --trace")
+    out: List[str] = []
+    if args.metrics is not None:
+        data = json.loads(args.metrics.read_text())
+        snaps = data if isinstance(data, list) else [{"metrics": data}]
+        for snap in snaps:
+            if len(snaps) > 1:
+                out.append(f"### process {snap.get('process', '?')} "
+                           f"({snap.get('host', '?')})\n")
+            out.append(render_metrics_markdown(snap.get("metrics", snap)))
+    if args.trace is not None:
+        data = json.loads(args.trace.read_text())
+        events = data.get("traceEvents", data) if isinstance(data, dict) \
+            else data
+        out.append("### span time by name\n")
+        out.append(render_trace_markdown(events))
+    sys.stdout.write("\n".join(out))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

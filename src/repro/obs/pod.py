@@ -1,0 +1,70 @@
+"""Pod-wide flight recorder: all-gather every host's recent spans and
+metrics so a stalled ``pod_flush`` is attributable to a specific host.
+
+``pod_snapshot()`` serializes the local tracer ring + metrics registry
+to JSON bytes, all-gathers them over the same machinery ``pod_flush``
+already rides (``launch.multihost.allgather_bytes``), and returns one
+dict per process.  Like every pod collective in this repo it is SPMD:
+**all processes must call it together**, or the gather deadlocks.
+
+Single-process (no ``jax.distributed``) it degrades to a one-element
+list, so callers don't need to branch.
+"""
+from __future__ import annotations
+
+import json
+import os
+import socket
+from typing import List, Optional
+
+from .metrics import default_registry
+from .trace import TRACER, merge_chrome_traces
+
+
+def _process_index() -> int:
+    """Pod process id: the live jax value when distributed is up, else
+    the bootstrap env var (obs must stay importable pre-bootstrap)."""
+    try:
+        import jax
+        return int(jax.process_index())
+    except Exception:
+        return int(os.environ.get("REPRO_PROCESS_ID", 0) or 0)
+
+
+def local_snapshot() -> dict:
+    """This process's observability state as a JSON-able dict."""
+    return {
+        "process": _process_index(),
+        "pid": os.getpid(),
+        "host": socket.gethostname(),
+        "events": TRACER.chrome_events(),
+        "metrics": default_registry().collect(),
+    }
+
+
+def pod_snapshot() -> List[dict]:
+    """All-gather every process's :func:`local_snapshot`.
+
+    Collective: call from all pod processes together (same contract as
+    ``ServeQueue.pod_flush``).  Returns the per-process snapshots in
+    process order; index ``i`` is process ``i``'s view.
+    """
+    local = local_snapshot()
+    try:
+        import jax
+        nproc = jax.process_count()
+    except Exception:
+        nproc = 1
+    if nproc <= 1:
+        return [local]
+    from repro.launch.multihost import allgather_bytes
+    blobs = allgather_bytes(json.dumps(local).encode("utf-8"))
+    return [json.loads(b.decode("utf-8")) for b in blobs]
+
+
+def merge_pod_trace(snapshots: List[dict], path: Optional[str] = None
+                    ) -> List[dict]:
+    """Merge per-host snapshot event lists into one Chrome trace (events
+    already carry wall-clock ``ts`` and per-process ``pid``)."""
+    return merge_chrome_traces(
+        [s.get("events") or [] for s in snapshots], path)

@@ -15,6 +15,7 @@ by tests/test_serve.py).
 """
 from __future__ import annotations
 
+import itertools
 import time
 from typing import Callable, List, Optional
 
@@ -22,8 +23,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import TRACER
 from repro.serve.scratch import ScratchPool
 from repro.serve.stats import ServeStats
+
+# process-wide dispatch sequence: ties a request's spans to the batch
+# that served it in a trace without threading ids through call sites
+_BATCH_IDS = itertools.count()
 
 
 def bucket_size(n: int, min_bucket: int = 8) -> int:
@@ -190,23 +196,37 @@ class Batcher:
         # monotonic throughout: latencies subtract submit-time stamps
         # taken with time.monotonic(), and mixing clocks is undefined
         t0 = time.monotonic()
+        tr = TRACER
+        traced = tr.enabled
+        bid = next(_BATCH_IDS)
         try:
             n = sum(r.n for r in requests)
             ctx = requests[0].ctx
             shards = (ctx.axis_size("data")
                       if ctx is not None and ctx.mesh is not None else 1)
             bucket = bucket_for(n, self.min_bucket, shards)
-            X, owned = self._gather(requests, n, bucket)
+            with tr.span("batch.gather", cat="batch",
+                         args={"key": key, "batch": bid, "rows": n,
+                               "bucket": bucket, "requests": len(requests)}):
+                X, owned = self._gather(requests, n, bucket)
             eng = self._engine_for(key)
-            with self._request_ctx(requests):
-                Y = eng.apply_batched(X, min_bucket=self.min_bucket,
-                                      donate=owned, prepadded=owned)
+            with tr.span("batch.apply", cat="batch",
+                         args={"key": key, "batch": bid, "bucket": bucket,
+                               "reason": reason}):
+                with self._request_ctx(requests):
+                    Y = eng.apply_batched(X, min_bucket=self.min_bucket,
+                                          donate=owned, prepadded=owned)
+                Y = jax.block_until_ready(Y)
             # one device->host gather for the whole mega-batch: scattering
             # zero-copy numpy row views is ~1000x cheaper than slicing a
             # mesh-sharded array once per caller (each such slice is a
             # cross-device gather of its own)
-            Y = self._to_host(jax.block_until_ready(Y))
+            with tr.span("batch.to_host", cat="batch",
+                         args={"key": key, "batch": bid}):
+                Y = self._to_host(Y)
         except Exception as e:  # engine/load failure fails the whole batch
+            tr.instant("batch.error", cat="batch",
+                       args={"key": key, "batch": bid, "error": repr(e)})
             for r in requests:
                 r.future.set_exception(e)
             stats.on_failure(requests=len(requests),
@@ -216,10 +236,24 @@ class Batcher:
         t1 = time.monotonic()
         off = 0
         lats = []
+        # per-request span [enqueue, future resolved]: with queue.submit
+        # it tiles the request's whole enqueue->resolve window, so
+        # coverage audits close; queued time is recoverable inside it as
+        # (batch.gather.ts - this span's ts).  One args dict serves every
+        # request of the batch (rec() documents shared-args safety).
+        rargs = {"key": key, "batch": bid, "reason": reason} if traced \
+            else None
         for r in requests:
             r.future.set_result(Y[off:off + r.n])
             off += r.n
             lats.append(t1 - r.t_enqueue)
+            if traced:
+                tr.rec("serve.request", "serve", r.t_enqueue,
+                       time.monotonic(), r.trace, rargs)
+        if traced:
+            tr.record("batch.scatter", t1, time.monotonic(), cat="batch",
+                      args={"key": key, "batch": bid,
+                            "requests": len(requests)})
         stats.on_batch(requests=len(requests), rows=n, bucket=bucket,
                        reason=reason, busy_s=t1 - t0, latencies_s=lats)
 
@@ -284,11 +318,18 @@ class Batcher:
         from repro.dist.sharding import current_ctx, use_mesh
         from repro.launch import multihost
         t0 = time.monotonic()
+        tr = TRACER
+        traced = tr.enabled
+        bid = next(_BATCH_IDS)
         if ctx is None:
             ctx = requests[0].ctx if requests else current_ctx()
         local_n = sum(r.n for r in requests)
         my_num = int(np.dtype(requests[0].x.dtype).num) if requests else -1
-        gathered = multihost.allgather_ints([local_n, my_num])
+        # pod.agree: the count/dtype all-gather is where a straggling
+        # host shows up — every peer's span stretches to the slowest one
+        with tr.span("pod.agree", cat="pod",
+                     args={"key": key, "batch": bid, "local_rows": local_n}):
+            gathered = multihost.allgather_ints([local_n, my_num])
         counts, dtype_nums = gathered[:, 0], gathered[:, 1]
         total = int(counts.sum())
         if total == 0:
@@ -327,15 +368,23 @@ class Batcher:
                                     global_shape=(bucket,) + feat)
             else:
                 X = jnp.asarray(slab)
-            with (use_mesh(ctx.mesh, ctx.multi_pod) if ctx is not None
-                  else use_mesh(None)):
-                Y = eng.apply_batched(X, min_bucket=self.min_bucket,
-                                      prepadded=True)
-            Y = jax.block_until_ready(Y)
+            with tr.span("batch.apply", cat="pod",
+                         args={"key": key, "batch": bid, "bucket": bucket,
+                               "pid": pid, "nproc": nproc,
+                               "local_rows": local_n, "total_rows": total}):
+                with (use_mesh(ctx.mesh, ctx.multi_pod) if ctx is not None
+                      else use_mesh(None)):
+                    Y = eng.apply_batched(X, min_bucket=self.min_bucket,
+                                          prepadded=True)
+                Y = jax.block_until_ready(Y)
             if requests:
                 base = pid * per_slab
-                Yh = self._to_host(Y, rows=(base, base + local_n))
+                with tr.span("batch.to_host", cat="pod",
+                             args={"key": key, "batch": bid}):
+                    Yh = self._to_host(Y, rows=(base, base + local_n))
         except Exception as e:
+            tr.instant("batch.error", cat="pod",
+                       args={"key": key, "batch": bid, "error": repr(e)})
             for r in requests:
                 r.future.set_exception(e)
             stats.on_failure(requests=len(requests), rows=local_n,
@@ -352,10 +401,15 @@ class Batcher:
         t1 = time.monotonic()
         off = 0
         lats = []
+        rargs = {"key": key, "batch": bid, "reason": reason,
+                 "pid": pid, "nproc": nproc} if traced else None
         for r in requests:
             r.future.set_result(Yh[off:off + r.n])
             off += r.n
             lats.append(t1 - r.t_enqueue)
+            if traced:
+                tr.rec("serve.request", "serve", r.t_enqueue,
+                       time.monotonic(), r.trace, rargs)
         stats.on_batch(requests=len(requests), rows=local_n, bucket=bucket,
                        reason=reason, busy_s=t1 - t0, latencies_s=lats,
                        remote_rows=total - local_n)

@@ -34,6 +34,8 @@ from typing import Dict, List, Optional
 
 import jax.numpy as jnp
 
+from repro.obs import TRACER
+from repro.obs.metrics import note_static_fallback
 from repro.serve.batcher import Batcher
 from repro.serve.stats import ServeStats
 
@@ -93,19 +95,22 @@ class ServeFuture:
 
 
 class _Request:
-    __slots__ = ("key", "x", "n", "future", "t_enqueue", "ctx")
+    __slots__ = ("key", "x", "n", "future", "t_enqueue", "ctx", "trace")
 
-    def __init__(self, key, x, n, future, t_enqueue, ctx):
+    def __init__(self, key, x, n, future, t_enqueue, ctx, trace=None):
         self.key, self.x, self.n = key, x, n
         self.future, self.t_enqueue = future, t_enqueue
         self.ctx = ctx  # submitter's ShardCtx: sharding is thread-local
+        self.trace = trace  # obs trace id, minted at submit, rides along
 
 
 class ServeQueue:
     def __init__(self, policy: FlushPolicy = FlushPolicy(), *,
-                 batcher: Optional[Batcher] = None, controller=None):
+                 batcher: Optional[Batcher] = None, controller=None,
+                 latency_window: int = 2048):
         self.policy = policy
         self.controller = controller  # e.g. tune.AdaptiveFlushController
+        self.latency_window = int(latency_window)
         self._batcher = batcher or Batcher(min_bucket=policy.min_bucket)
         self._cv = threading.Condition()
         self._pending: Dict[str, List[_Request]] = {}
@@ -123,7 +128,8 @@ class ServeQueue:
         if self.controller is not None:
             try:
                 return self.controller.delay_for(key, self._stats.get(key))
-            except Exception:
+            except Exception as exc:
+                note_static_fallback(key, "controller-error", repr(exc))
                 return self.policy.max_delay_s
         return self.policy.max_delay_s
 
@@ -132,7 +138,8 @@ class ServeQueue:
             try:
                 return max(1, int(self.controller.batch_rows_for(
                     key, self._stats.get(key))))
-            except Exception:
+            except Exception as exc:
+                note_static_fallback(key, "controller-error", repr(exc))
                 return self.policy.max_batch_rows
         return self.policy.max_batch_rows
 
@@ -149,7 +156,8 @@ class ServeQueue:
     def _stat_locked(self, key: str) -> ServeStats:
         st = self._stats.get(key)
         if st is None:
-            st = self._stats[key] = ServeStats(key)
+            st = self._stats[key] = ServeStats(
+                key, latency_window=self.latency_window)
         return st
 
     def depth(self, key: Optional[str] = None) -> int:
@@ -172,8 +180,10 @@ class ServeQueue:
             raise ValueError(f"submit needs [n, ...] rows, got {x.shape}")
         n = int(x.shape[0])
         fut = ServeFuture(self, key)
-        req = _Request(key, x, n, fut, time.monotonic(), current_ctx())
-        deadline = time.monotonic() + self.policy.block_timeout_s
+        t_sub = time.monotonic()
+        trace = TRACER.new_trace_id() if TRACER.enabled else None
+        req = _Request(key, x, n, fut, t_sub, current_ctx(), trace)
+        deadline = t_sub + self.policy.block_timeout_s
         while True:
             admitted, drain_inline, flush_inline = False, False, False
             with self._cv:
@@ -213,6 +223,14 @@ class ServeQueue:
                     # submitting thread must make space itself
                     drain_inline = True
             if admitted:
+                if trace is not None:
+                    # submitter-thread span: admission (incl. any time
+                    # blocked on backpressure).  The dispatcher's
+                    # serve.request span starts at t_enqueue, so together
+                    # the request's spans tile enqueue -> resolve gap-free.
+                    TRACER.rec("queue.submit", "queue", t_sub,
+                               time.monotonic(), trace,
+                               {"key": key, "rows": n})
                 if flush_inline:
                     self.flush(key, reason="max_batch")
                 return fut

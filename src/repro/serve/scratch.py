@@ -22,6 +22,11 @@ from typing import Tuple
 
 import numpy as np
 
+from repro.obs import metrics as _m
+
+_POOL_REQS = _m.counter("repro_scratch_pool_requests_total",
+                        "scratch-buffer takes by outcome", ("outcome",))
+
 
 class ScratchPool:
     """Reusable pinned host buffers, refcount-guarded against live views."""
@@ -56,8 +61,10 @@ class ScratchPool:
                 # holds the base chain and pushes this past 3.
                 if buf.nbytes >= nbytes and sys.getrefcount(buf) <= 3:
                     self.hits += 1
+                    _POOL_REQS.inc(1, outcome="hit")
                     return buf[:nbytes].view(dtype).reshape(shape)
             self.misses += 1
+            _POOL_REQS.inc(1, outcome="miss")
             buf = np.empty((max(nbytes, self.min_bytes),), np.uint8)
             self._bufs.append(buf)
             if len(self._bufs) > self.max_buffers:

@@ -22,6 +22,8 @@ import time
 from collections import Counter, deque
 from typing import Deque, Dict, Optional, Tuple
 
+from repro.obs import metrics as _m
+
 
 def _percentile(sorted_vals, q: float) -> float:
     if not sorted_vals:
@@ -45,6 +47,53 @@ class ServeStats:
     def __init__(self, key: str, latency_window: int = 2048):
         self.key = key
         self._lock = threading.Lock()
+        self.latency_window = int(latency_window)
+        # obs metric families, bound once per key (label resolution off
+        # the hot path); mutation below publishes into these so a scrape
+        # sees the same numbers snapshot() reports, across all queues
+        self._m_rows_enq = _m.counter(
+            "repro_serve_rows_enqueued_total",
+            "rows submitted to the serve queue", ("key",))
+        self._m_reqs_enq = _m.counter(
+            "repro_serve_requests_enqueued_total",
+            "requests submitted to the serve queue", ("key",))
+        self._m_rows_done = _m.counter(
+            "repro_serve_rows_completed_total",
+            "rows served back to callers", ("key",))
+        self._m_reqs_done = _m.counter(
+            "repro_serve_requests_completed_total",
+            "requests resolved successfully", ("key",))
+        self._m_rows_failed = _m.counter(
+            "repro_serve_rows_failed_total",
+            "rows whose dispatch raised", ("key",))
+        self._m_batches = _m.counter(
+            "repro_serve_batches_total",
+            "dispatched mega-batches by flush reason", ("key", "reason"))
+        self._m_batches_failed = _m.counter(
+            "repro_serve_batches_failed_total",
+            "dispatches that raised", ("key",))
+        self._m_padded = _m.counter(
+            "repro_serve_padded_rows_total",
+            "bucket rows that were padding, not work", ("key",))
+        self._m_remote = _m.counter(
+            "repro_serve_remote_rows_total",
+            "rows served for other pod hosts in shared mega-batches",
+            ("key",))
+        self._m_depth_rows = _m.gauge(
+            "repro_serve_queue_depth_rows",
+            "rows waiting in the queue right now", ("key",))
+        self._m_depth_reqs = _m.gauge(
+            "repro_serve_queue_depth_requests",
+            "requests waiting in the queue right now", ("key",))
+        self._m_occupancy = _m.gauge(
+            "repro_serve_batch_occupancy",
+            "real rows / bucket rows over all dispatches", ("key",))
+        self._m_batch_lat = _m.histogram(
+            "repro_serve_batch_latency_seconds",
+            "wall time of one dispatched mega-batch", ("key",))
+        self._m_req_lat = _m.histogram(
+            "repro_serve_request_latency_seconds",
+            "enqueue -> future-resolved latency per request", ("key",))
         self.requests_enqueued = 0
         self.rows_enqueued = 0
         self.requests_completed = 0
@@ -86,6 +135,12 @@ class ServeStats:
             self.queue_depth_rows += rows
             self.queue_depth_requests += 1
             self._arrivals.append((time.monotonic(), rows))
+            depth_rows, depth_reqs = \
+                self.queue_depth_rows, self.queue_depth_requests
+        self._m_reqs_enq.inc(1, key=self.key)
+        self._m_rows_enq.inc(rows, key=self.key)
+        self._m_depth_rows.set(depth_rows, key=self.key)
+        self._m_depth_reqs.set(depth_reqs, key=self.key)
 
     def on_failure(self, *, requests: int, rows: int, reason: str,
                    busy_s: float) -> None:
@@ -103,6 +158,12 @@ class ServeStats:
             self.queue_depth_requests -= requests
             self.flush_reasons[reason] += 1
             self.busy_s += busy_s
+            depth_rows, depth_reqs = \
+                self.queue_depth_rows, self.queue_depth_requests
+        self._m_batches_failed.inc(1, key=self.key)
+        self._m_rows_failed.inc(rows, key=self.key)
+        self._m_depth_rows.set(depth_rows, key=self.key)
+        self._m_depth_reqs.set(depth_reqs, key=self.key)
 
     def on_batch(self, *, requests: int, rows: int, bucket: int,
                  reason: str, busy_s: float, latencies_s,
@@ -136,6 +197,22 @@ class ServeStats:
             else:
                 ewma[0] += self.BATCH_LATENCY_ALPHA * (busy_s - ewma[0])
                 ewma[1] += 1
+            occ = ((self.rows_completed + self.remote_rows)
+                   / self.bucket_rows if self.bucket_rows else 0.0)
+            depth_rows, depth_reqs = \
+                self.queue_depth_rows, self.queue_depth_requests
+        self._m_batches.inc(1, key=self.key, reason=reason)
+        self._m_reqs_done.inc(requests, key=self.key)
+        self._m_rows_done.inc(rows, key=self.key)
+        self._m_padded.inc(max(0, bucket - rows - remote_rows), key=self.key)
+        if remote_rows:
+            self._m_remote.inc(remote_rows, key=self.key)
+        self._m_occupancy.set(occ, key=self.key)
+        self._m_depth_rows.set(depth_rows, key=self.key)
+        self._m_depth_reqs.set(depth_reqs, key=self.key)
+        self._m_batch_lat.observe(busy_s, key=self.key)
+        for lat in latencies_s:
+            self._m_req_lat.observe(lat, key=self.key)
 
     def batch_latency_s(self, bucket: int,
                         min_batches: int = 1) -> Optional[float]:
@@ -168,12 +245,15 @@ class ServeStats:
     # --------------------------------------------------------- snapshot ---
     def snapshot(self) -> Dict:
         with self._lock:
-            lat = sorted(self._lat)
+            # copy only — sorting a full 2048-entry window under the
+            # lock stalled every on_batch/on_enqueue racing a dashboard
+            # poll; the sort happens on the snapshotter's own time below
+            lat = list(self._lat)
             occ = ((self.rows_completed + self.remote_rows)
                    / self.bucket_rows if self.bucket_rows else 0.0)
             rows_per_s = (self.rows_completed / self.busy_s
                           if self.busy_s > 0 else 0.0)
-            return {
+            snap = {
                 "key": self.key,
                 "requests_enqueued": self.requests_enqueued,
                 "rows_enqueued": self.rows_enqueued,
@@ -191,8 +271,6 @@ class ServeStats:
                 "queue_depth_requests": self.queue_depth_requests,
                 "batch_occupancy": occ,
                 "flush_reasons": dict(self.flush_reasons),
-                "latency_p50_ms": _percentile(lat, 0.50) * 1e3,
-                "latency_p99_ms": _percentile(lat, 0.99) * 1e3,
                 "rows_per_s": rows_per_s,
                 "arrival_rate_rows_s": self._arrival_rate_locked(),
                 "batch_latency_ewma_ms": {
@@ -201,6 +279,10 @@ class ServeStats:
                 "batch_latency_batches": {
                     b: e[1] for b, e in sorted(self._bucket_lat.items())},
             }
+        lat.sort()
+        snap["latency_p50_ms"] = _percentile(lat, 0.50) * 1e3
+        snap["latency_p99_ms"] = _percentile(lat, 0.99) * 1e3
+        return snap
 
     def _arrival_rate_locked(self, now: float = None) -> float:
         if len(self._arrivals) < 2:

@@ -207,12 +207,32 @@ def _record_params(rec: Optional[dict]) -> Optional[Dict[str, int]]:
 
 def best_params(kernel: str, keys: Sequence[str]) -> Optional[Dict[str, int]]:
     """First validated winner along ``keys`` (ordered lookup fallbacks,
-    e.g. fused_mlp's exact-batch-then-pow2-bucket chain), or None."""
+    e.g. fused_mlp's exact-batch-then-pow2-bucket chain), or None.
+
+    Outcomes publish to the obs metrics layer: sustained misses mean the
+    serving shapes have drifted away from what the sweep tuned, and the
+    per-key miss counter is the signal the planned online re-sweep will
+    trigger from.
+    """
+    from repro.obs import metrics as _m
     cache = default_cache(kernel)
     for key in keys:
         params = _record_params(cache.get(key))
         if params is not None:
+            _m.counter("repro_tune_cache_lookups_total",
+                       "tune-cache lookups by outcome",
+                       ("kernel", "outcome")).inc(
+                1, kernel=kernel, outcome="hit")
             return params
+    _m.counter("repro_tune_cache_lookups_total",
+               "tune-cache lookups by outcome",
+               ("kernel", "outcome")).inc(1, kernel=kernel, outcome="miss")
+    if keys:
+        # the most specific key is the serving shape that went untuned —
+        # exactly what a drift-triggered re-sweep needs to know
+        _m.counter("repro_tune_cache_miss_keys_total",
+                   "tune-cache lookup chains that missed, by leading key",
+                   ("kernel", "key")).inc(1, kernel=kernel, key=keys[0])
     return None
 
 

@@ -68,6 +68,12 @@ import time
 from typing import Callable, Dict, Optional, Tuple
 
 from repro.dist.hlo_analysis import HBM_BW, PEAK_FLOPS, Roofline
+from repro.obs import metrics as _m
+
+_DECISIONS = _m.counter(
+    "repro_controller_decisions_total",
+    "adaptive flush decisions by latency-model source",
+    ("key", "source"))
 
 
 def mlp_resources(widths, batch: int, dtype_bytes: int = 4):
@@ -162,8 +168,9 @@ class AdaptiveFlushController:
                 return self._widths[key]
         try:
             w = self._widths_for(key)
-        except Exception:
+        except Exception as exc:
             w = None  # unknown bundle shape -> degrade to static policy
+            _m.note_static_fallback(key, "unknown-widths", repr(exc))
         with self._lock:
             self._widths[key] = w
         return w
@@ -311,6 +318,7 @@ class AdaptiveFlushController:
             "batch_latency_s": t_serve, "latency_source": source,
             "predicted_batch_latency_s": pred,
             "fill_s": fill_s, "delay_s": delay}
+        _DECISIONS.inc(1, key=key, source=source)
         self._memo[key] = (now, delay)
         return delay
 
