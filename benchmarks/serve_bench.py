@@ -39,6 +39,15 @@ OVERHEAD_MIN_RATIO = 0.98
 #: a sampled request's spans must cover >= this much of its measured
 #: enqueue->resolve window (no unaccounted gaps)
 TRACE_MIN_COVERAGE = 0.95
+#: shadow-quality gate: sampling ON must keep >= this fraction of the
+#: unsampled rows/s (same interleaved-pair minimum as the tracing gate)
+SHADOW_MIN_RATIO = 0.98
+#: shadow sampling fraction under test (overridable for sweeps)
+SHADOW_RATE = float(os.environ.get("REPRO_SHADOW_RATE", "") or 0.05)
+#: injected weight corruption must flip the drift alert to CRITICAL
+#: within this many shadow samples
+SHADOW_ALERT_SAMPLES = 20
+SHADOW_RMSE_BUDGET = 0.05
 
 
 def _bundle(path):
@@ -305,6 +314,237 @@ def overhead_check(fast=False, pairs=50):
     return ratio
 
 
+def shadow_overhead_check(fast=False, pairs=50):
+    """Gate shadow-sampling cost on the serving hot path.
+
+    The coalesced region path (``MLRegion._infer_async`` — where the
+    sampling hook lives) runs with shadow sampling toggled every other
+    run at :data:`SHADOW_RATE`, tracing off on both sides, and the gate
+    compares minimum unsampled time against minimum sampled time — the
+    same interleaved-pair methodology as :func:`overhead_check` (see
+    there for why min/min + alternating within-pair order + paused GC).
+    The accurate-path replay cost lands on the scorer's background
+    thread by design; what this gates is the hot-path hook (an attribute
+    check + Bernoulli draw) plus any GIL pressure the replays leak into
+    the serving threads.
+    """
+    import gc
+    import tempfile
+
+    from repro.apps import binomial
+    from repro.dist.sharding import use_mesh
+    from repro.launch.mesh import make_local_mesh
+    from repro.obs import SHADOW, TRACER, disable_tracing
+    from repro.serve import FlushPolicy, ServeQueue
+
+    n_callers = 16 if fast else 32
+    rows_per_call = 8
+    total = n_callers * rows_per_call
+    tmp = pathlib.Path(tempfile.mkdtemp(prefix="serve_shadow_bench_"))
+    mp = _bundle(tmp / "surrogate")
+    mesh = make_local_mesh((len(jax.devices()), 1))
+    queue = ServeQueue(FlushPolicy(max_batch_rows=total,
+                                   max_pending_rows=4 * total))
+    region = binomial.make_region(rows_per_call, mode="infer_async",
+                                  model=mp, serving=queue)
+    opts = binomial.make_inputs(total, seed=11)
+    chunks = [opts[i:i + rows_per_call]
+              for i in range(0, total, rows_per_call)]
+
+    def run_once():
+        handles = [region(opts=c) for c in chunks]
+        queue.flush(mp, reason="bench")
+        for h in handles:
+            h.result(30)
+
+    was_traced, was_shadow = TRACER.enabled, SHADOW.enabled
+    prev_rate = SHADOW.rate
+    offs, ons = [], []
+    try:
+        with use_mesh(mesh):
+            disable_tracing()
+            # warmup at rate 1.0: compiles the surrogate path AND the
+            # accurate replay (binomial's 256-step scan) and spins up
+            # the scorer thread, all outside timing
+            SHADOW.enable(rate=1.0)
+            _measure(run_once, reps=1, warmup=3)
+            SHADOW.flush(60)
+            SHADOW.disable()
+            gc.disable()
+            try:
+                for i in range(pairs):
+                    halves = [(False, offs), (True, ons)]
+                    if i % 2:
+                        halves.reverse()
+                    for on, times in halves:
+                        if on:
+                            SHADOW.enable(rate=SHADOW_RATE)
+                        else:
+                            SHADOW.disable()
+                        t0 = time.perf_counter()
+                        run_once()
+                        times.append(time.perf_counter() - t0)
+                        # drain the scorer after every half, untimed:
+                        # residual replays must not bleed GIL time into
+                        # the next timed run (that is backlog cost, not
+                        # the hot-path hook cost this gates)
+                        SHADOW.disable()
+                        SHADOW.flush(30)
+                    if i % 10 == 9:
+                        gc.collect()
+            finally:
+                gc.enable()
+            SHADOW.disable()
+            SHADOW.flush(30)
+    finally:
+        TRACER.enabled = was_traced
+        SHADOW.rate = prev_rate
+        SHADOW.enabled = was_shadow
+    ratio = min(offs) / min(ons)
+    print(f"[shadow overhead] sampling at {SHADOW_RATE:.0%} retains "
+          f"{ratio * 100:.1f}% of unsampled rows/s over {pairs} "
+          f"interleaved pairs (off {min(offs) * 1e3:.3f}ms / on "
+          f"{min(ons) * 1e3:.3f}ms)", flush=True)
+    if ratio < SHADOW_MIN_RATIO:
+        raise SystemExit(
+            f"shadow overhead gate FAILED: sampled/unsampled rows/s "
+            f"ratio {ratio:.3f} < {SHADOW_MIN_RATIO} (shadow sampling "
+            f"costs more than {100 * (1 - SHADOW_MIN_RATIO):.0f}%)")
+    return ratio
+
+
+def shadow_alert_check():
+    """Injected weight corruption must actually fire the drift alert.
+
+    A region whose accurate function *is* the surrogate's own original
+    forward serves through the queue with shadow sampling at 100%: the
+    clean run scores RMSE ~0 and must stay OK.  Then the bundle is
+    rewritten with corrupted weights — the engine's mtime-staleness
+    reload picks them up on the next batch — and the RMSE EWMA must
+    cross the budget and latch CRITICAL within
+    :data:`SHADOW_ALERT_SAMPLES` shadow samples, visibly: ``/healthz``
+    flips 200 -> 503, ``/metrics`` carries ``repro_quality_rmse`` (and
+    validates as Prometheus text), and the pod snapshot reports the
+    CRITICAL state.
+    """
+    import tempfile
+    import urllib.error
+    import urllib.request
+
+    from repro.core import approx_ml, tensor_functor
+    from repro.nn.serialize import load_model, save_model
+    from repro.obs import (MONITOR, SHADOW, SLO, ObsServer, pod_snapshot,
+                           validate_exposition)
+    from repro.serve import FlushPolicy, ServeQueue
+
+    rows_per_call, n_callers = 8, 8
+    tmp = pathlib.Path(tempfile.mkdtemp(prefix="serve_shadow_alert_"))
+    mp = _bundle(tmp / "surrogate")
+    net, params0, _ = load_model(mp)
+    ref_apply = jax.jit(net.apply)
+
+    def fn(x):
+        return {"out": ref_apply(params0, x)}
+
+    rngs = {"i": (0, rows_per_call)}
+    qin = tensor_functor("qin: [i, 0:5] = ([i, 0:5])")
+    qout = tensor_functor("qout: [i, 0:1] = ([i, 0:1])")
+    queue = ServeQueue(FlushPolicy(max_batch_rows=1024))
+    region = approx_ml(fn, name="shadow_probe",
+                       inputs={"x": (qin, rngs)},
+                       outputs={"out": (qout, rngs)},
+                       mode="infer_async", model=mp, serving=queue)
+    rng = np.random.default_rng(5)
+    chunks = [rng.standard_normal((rows_per_call, 5)).astype(np.float32)
+              for _ in range(n_callers)]
+
+    was_shadow, prev_rate = SHADOW.enabled, SHADOW.rate
+    SHADOW.enable(rate=1.0)
+    SHADOW.set_budget(mp, SHADOW_RMSE_BUDGET)
+    MONITOR.track(mp, queue.stats(mp),
+                  SLO(latency_threshold_s=5.0, windows_s=(30.0, 120.0),
+                      min_events=1))
+    server = ObsServer().start().watch_queue("serve", queue)
+
+    def run_batch():
+        handles = [region(x=c) for c in chunks]
+        queue.flush(mp, reason="bench")
+        for h in handles:
+            h.result(30)
+
+    def healthz_code():
+        try:
+            with urllib.request.urlopen(server.url("/healthz"),
+                                        timeout=10) as r:
+                return r.status
+        except urllib.error.HTTPError as e:
+            return e.code
+
+    try:
+        # clean phase: surrogate == accurate fn, alert must stay OK
+        for _ in range(3):
+            run_batch()
+        if not SHADOW.flush(60):
+            raise SystemExit("shadow alert check: scorer backlog did not "
+                             "drain on the clean run")
+        clean = SHADOW.snapshot()["keys"][mp]
+        code = healthz_code()
+        print(f"[shadow alert] clean: rmse_ewma="
+              f"{clean['rmse_ewma']:.3g} state={clean['state']} "
+              f"healthz={code}", flush=True)
+        if clean["state"] != "OK" or code != 200:
+            raise SystemExit(
+                f"shadow alert check FAILED: clean run reports "
+                f"{clean['state']}/HTTP {code} (expected OK/200)")
+
+        # corrupt the bundle in place; the engine's mtime fingerprint
+        # reloads it on the next batch while fn keeps the true params
+        bad = jax.tree_util.tree_map(lambda p: p + 0.5, params0)
+        save_model(mp, net, bad)
+        fired_at = None
+        for batch in range(SHADOW_ALERT_SAMPLES):
+            run_batch()
+            SHADOW.flush(60)
+            if SHADOW.state(mp) == "CRITICAL":
+                fired_at = batch + 1
+                break
+        snap = SHADOW.snapshot()["keys"][mp]
+        code = healthz_code()
+        print(f"[shadow alert] corrupted: rmse_ewma="
+              f"{snap['rmse_ewma']:.3g} state={snap['state']} "
+              f"fired_after={fired_at} batches healthz={code}", flush=True)
+        if fired_at is None:
+            raise SystemExit(
+                f"shadow alert check FAILED: drift alert never reached "
+                f"CRITICAL within {SHADOW_ALERT_SAMPLES} corrupted "
+                f"batches (rmse_ewma={snap['rmse_ewma']:.3g}, budget "
+                f"{SHADOW_RMSE_BUDGET})")
+        if code != 503:
+            raise SystemExit(
+                f"shadow alert check FAILED: /healthz returned {code} "
+                f"with a CRITICAL drift alert (expected 503)")
+        with urllib.request.urlopen(server.url("/metrics"),
+                                    timeout=10) as r:
+            text = r.read().decode("utf-8")
+        validate_exposition(text)
+        if "repro_quality_rmse{" not in text:
+            raise SystemExit("shadow alert check FAILED: /metrics has no "
+                             "repro_quality_rmse samples")
+        pod_q = pod_snapshot()[0]["quality"]["keys"].get(mp, {})
+        if pod_q.get("state") != "CRITICAL":
+            raise SystemExit(
+                f"shadow alert check FAILED: pod snapshot reports "
+                f"{pod_q.get('state')!r}, expected CRITICAL")
+        print(f"[shadow alert] OK: corruption fired CRITICAL after "
+              f"{fired_at} batches; healthz 503; exposition valid; pod "
+              f"snapshot agrees", flush=True)
+    finally:
+        server.stop()
+        MONITOR.untrack(mp)
+        SHADOW.rate = prev_rate
+        SHADOW.enabled = was_shadow
+
+
 def _markdown(rows, model_err):
     kv = dict(item.split("=", 1) for item in rows[0][2].split(";"))
     out = ["### Serving throughput (8-device host mesh)", "",
@@ -343,6 +583,12 @@ def main():
                     help="gate instrumentation cost: tracing on must "
                          f"retain >= {OVERHEAD_MIN_RATIO:.0%} of untraced "
                          "rows/s (interleaved-pair median ratio)")
+    ap.add_argument("--shadow-check", action="store_true",
+                    help="gate shadow-quality cost (sampling at "
+                         f"{SHADOW_RATE:.0%} must retain >= "
+                         f"{SHADOW_MIN_RATIO:.0%} of unsampled rows/s) and "
+                         "prove injected weight corruption fires the "
+                         "CRITICAL drift alert")
     args = ap.parse_args()
     if args.trace:
         from repro.obs import enable_tracing
@@ -367,6 +613,19 @@ def main():
         print(f"[serve smoke] OK: {speedup:.2f}x coalesced over per-call")
     if args.overhead_check:
         overhead_check(fast=args.fast)
+    if args.shadow_check:
+        shadow_overhead_check(fast=args.fast)
+        shadow_alert_check()
+        if args.trace:
+            # refresh the metrics snapshots so the exported artifacts
+            # (and the CI quality report rendered from them) include the
+            # shadow-quality families the checks just populated
+            from repro.obs import default_registry
+            path = pathlib.Path(args.trace)
+            metrics = default_registry()
+            path.with_suffix(".metrics.json").write_text(
+                json.dumps(metrics.collect(), indent=1))
+            path.with_suffix(".prom").write_text(metrics.dump())
 
 
 if __name__ == "__main__":

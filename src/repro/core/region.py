@@ -40,6 +40,7 @@ from repro.core.database import SurrogateDB
 from repro.core.engine import InferenceEngine
 from repro.core.functor import TensorFunctor
 from repro.core.tensor_map import TensorMap
+from repro.obs.quality import SHADOW
 
 
 def _is_traced(*arrays):
@@ -172,6 +173,8 @@ class MLRegion:
     def _infer(self, arrays: dict):
         eng, Xb = self._rows_in(arrays)
         Y = eng(Xb)
+        if SHADOW.enabled and not _is_traced(arrays, Xb) and SHADOW.sample():
+            self._shadow_submit(arrays, rows=int(Xb.shape[0]), Y=Y)
         return self._bridge_from_jit(Y, arrays)
 
     def _infer_async(self, arrays: dict) -> AsyncRegionResult:
@@ -184,7 +187,30 @@ class MLRegion:
         eng, Xb = self._rows_in(arrays)
         del eng  # resolved for bundle load/reload; batcher re-gets per batch
         fut = self.serving.submit(self.model_path, Xb)
+        if SHADOW.enabled and SHADOW.sample():
+            self._shadow_submit(arrays, rows=int(Xb.shape[0]), future=fut)
         return AsyncRegionResult(self, arrays, future=fut)
+
+    def _shadow_submit(self, arrays: dict, *, rows: int, Y=None,
+                       future=None) -> None:
+        """Capture this sampled invocation for background accuracy
+        scoring: the surrogate's output rows vs the accurate function's
+        bridged output over a *snapshot* of the inputs (the app may
+        mutate its buffers after the region returns).  The accurate
+        replay runs later on the scorer's worker thread — never here."""
+        snap = {k: np.array(v) for k, v in arrays.items()}
+        if future is not None:
+            pred = lambda: np.asarray(future.result(60.0))  # noqa: E731
+            trace = future.trace
+        else:
+            pred = lambda: np.asarray(Y)  # noqa: E731
+            trace = None
+
+        def ref():
+            return np.asarray(self.bridge_out_tensors(self.fn(**snap)))
+
+        SHADOW.submit(self.model_path, pred=pred, ref=ref,
+                      region=self.name, rows=rows, trace=trace)
 
     def _n_sweep(self) -> int:
         functor = next(iter(self.inputs.values()))[0]

@@ -273,6 +273,10 @@ def main():
                          "all-gather every host's spans/metrics "
                          "(obs.pod_snapshot) and write the merged Chrome "
                          "trace to artifacts/obs/pod_trace.json")
+    ap.add_argument("--shadow-rate", type=float, default=None,
+                    help="with --pod-smoke: shadow-score this fraction of "
+                         "served requests per host (default 1.0 with "
+                         "--obs) and report cross-host drift state")
     ap.add_argument("--tune", action="store_true",
                     help="pre-populate the kernel autotune cache for the "
                          "serve-path shapes (see repro.tune)")
@@ -301,7 +305,8 @@ def main():
         obs_out = None
         if args.obs:
             obs_out = str(ARTIFACTS.parent / "obs" / "pod_trace.json")
-        run_pod_smoke(processes=args.pod_processes, obs_out=obs_out)
+        run_pod_smoke(processes=args.pod_processes, obs_out=obs_out,
+                      shadow_rate=args.shadow_rate)
         return
 
     if args.obs:

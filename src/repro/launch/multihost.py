@@ -405,7 +405,20 @@ def _smoke_worker(tmp: str, callers_per_host: int = 3,
         "remote_rows": int(snap["remote_rows"]),
         "global_devices": jax.device_count(),
     }
-    from repro.obs import TRACER, pod_snapshot
+    from repro.obs import SHADOW, TRACER, pod_snapshot
+    if SHADOW.enabled:
+        # quality pass: every host shadow-scores its own served rows
+        # against the eager single-process reference it already computed
+        # (bit-identical -> the drift alert must stay OK; cross-host
+        # state rides the pod snapshot below)
+        SHADOW.set_budget(bundle, 0.05)
+        for c in range(callers_per_host):
+            SHADOW.submit(bundle,
+                          pred=lambda g=got[c]: g,
+                          ref=lambda r=ref[c]: r,
+                          region="pod-smoke", rows=rows_per_caller)
+        SHADOW.flush(60.0)
+        out["quality_state"] = SHADOW.state(bundle)
     if TRACER.enabled:
         # flight-recorder pass: all-gather every host's spans/metrics
         # (collective, so it must run before the final barrier on every
@@ -419,7 +432,8 @@ def _smoke_worker(tmp: str, callers_per_host: int = 3,
 def run_smoke(processes: int = 2, devices_per_host: int = 2,
               tmpdir: Optional[str] = None,
               timeout_s: float = 420.0,
-              obs_out: Optional[str] = None) -> List[Dict[str, Any]]:
+              obs_out: Optional[str] = None,
+              shadow_rate: Optional[float] = None) -> List[Dict[str, Any]]:
     """The multi-process CI smoke: spawn_local_pod driving a cross-host
     serve round-trip.  Raises on any correctness failure; returns the
     per-process summaries.
@@ -428,12 +442,25 @@ def run_smoke(processes: int = 2, devices_per_host: int = 2,
     tracing on, every host's spans/metrics are all-gathered in-pod
     (``obs.pod_snapshot``), and the merged Chrome trace lands at
     ``obs_out`` (open in Perfetto; each host is one pid track).
+
+    ``shadow_rate`` enables shadow quality scoring in every child
+    (defaults to 1.0 when the flight recorder is on); the smoke then
+    also requires every host's drift alert to report OK — the served
+    rows are bit-identical to the accurate reference, so anything else
+    is a monitor bug.
     """
     tmp = tmpdir or tempfile.mkdtemp(prefix="repro_pod_smoke_")
-    extra_env = {"REPRO_TRACE": "1"} if obs_out else None
+    if shadow_rate is None and obs_out:
+        shadow_rate = 1.0
+    extra_env: Dict[str, str] = {}
+    if obs_out:
+        extra_env["REPRO_TRACE"] = "1"
+    if shadow_rate:
+        extra_env["REPRO_SHADOW_RATE"] = str(shadow_rate)
     res = spawn_local_pod(processes, "repro.launch.multihost:_smoke_worker",
                           (tmp,), devices_per_host=devices_per_host,
-                          timeout_s=timeout_s, extra_env=extra_env)
+                          timeout_s=timeout_s,
+                          extra_env=extra_env or None)
     failures = []
     for r in res:
         if not r["equal"]:
@@ -447,21 +474,29 @@ def run_smoke(processes: int = 2, devices_per_host: int = 2,
         if r["bucket"] <= r["local_rows"]:
             failures.append(f"p{r['pid']}: global bucket {r['bucket']} "
                             f"does not exceed local rows {r['local_rows']}")
+        if shadow_rate and r.get("quality_state") != "OK":
+            failures.append(
+                f"p{r['pid']}: drift alert {r.get('quality_state')!r} on "
+                f"bit-identical served rows (expected OK)")
     for r in res:
+        q = f" quality={r['quality_state']}" if "quality_state" in r else ""
         print(f"[pod-smoke] p{r['pid']}/{r['nproc']} "
               f"devices={r['global_devices']} bucket={r['bucket']} "
-              f"remote_rows={r['remote_rows']} equal={r['equal']}",
+              f"remote_rows={r['remote_rows']} equal={r['equal']}{q}",
               flush=True)
     if failures:
         raise PodWorkerError("pod smoke FAILED:\n" + "\n".join(failures))
     if obs_out:
         # process 0's gathered snapshots already hold every host's view;
         # the merge is jax-free so the parent harness can write it
-        from repro.obs import merge_pod_trace
+        from repro.obs import merge_pod_trace, pod_quality_report
         snapshots = (res[0] or {}).get("obs") or []
         merged = merge_pod_trace(snapshots, obs_out)
         print(f"[pod-smoke] obs: merged {len(merged)} events from "
               f"{len(snapshots)} hosts -> {obs_out}", flush=True)
+        if shadow_rate:
+            print("[pod-smoke] cross-host surrogate quality:", flush=True)
+            print(pod_quality_report(snapshots), flush=True)
     print(f"[pod-smoke] OK: {processes} processes, cross-host mega-batch, "
           f"bit-identical to single-process serving", flush=True)
     return res
@@ -477,11 +512,15 @@ def main() -> None:
     ap.add_argument("--obs", default=None, metavar="PATH",
                     help="flight recorder: run the pod with tracing on "
                          "and write the merged Chrome trace to PATH")
+    ap.add_argument("--shadow-rate", type=float, default=None,
+                    help="shadow-score this fraction of served requests "
+                         "in every pod process (default 1.0 with --obs)")
     args = ap.parse_args()
     if args.smoke:
         run_smoke(processes=args.processes,
                   devices_per_host=args.devices_per_host,
-                  obs_out=args.obs)
+                  obs_out=args.obs,
+                  shadow_rate=args.shadow_rate)
         return
     ap.error("nothing to do (pass --smoke)")
 

@@ -11,7 +11,12 @@ from .trace import (TRACER, Span, Tracer, disable_tracing, enable_tracing,
                     request_coverage, tracing_enabled)
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                       default_registry, note_static_fallback, warn_once)
-from .pod import local_snapshot, merge_pod_trace, pod_snapshot
+from .quality import (CRITICAL, LEVELS, OK, SHADOW, WARN, AlertMachine,
+                      ShadowScorer, get_shadow)
+from .slo import MONITOR, SLO, SLOMonitor, get_monitor
+from .server import ObsServer, validate_exposition
+from .pod import (local_snapshot, merge_pod_trace, pod_quality_report,
+                  pod_snapshot)
 
 __all__ = [
     "TRACER", "Span", "Tracer", "enable_tracing", "disable_tracing",
@@ -19,5 +24,10 @@ __all__ = [
     "merge_chrome_traces", "request_coverage",
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "default_registry",
     "warn_once", "note_static_fallback",
+    "SHADOW", "ShadowScorer", "AlertMachine", "get_shadow",
+    "OK", "WARN", "CRITICAL", "LEVELS",
+    "MONITOR", "SLO", "SLOMonitor", "get_monitor",
+    "ObsServer", "validate_exposition",
     "local_snapshot", "pod_snapshot", "merge_pod_trace",
+    "pod_quality_report",
 ]

@@ -21,6 +21,7 @@ diagnosable), and every occurrence counts in
 from __future__ import annotations
 
 import logging
+import math
 import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -35,6 +36,18 @@ DEFAULT_BUCKETS = (1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2,
 def _escape(value: str) -> str:
     return (str(value).replace("\\", "\\\\").replace("\n", "\\n")
             .replace('"', '\\"'))
+
+
+def _fmt_value(v: float) -> str:
+    """Prometheus sample-value rendering: the exposition format spells
+    non-finite values ``NaN`` / ``+Inf`` / ``-Inf`` (``%g`` would emit
+    ``nan``/``inf``, which real scrapers reject)."""
+    v = float(v)
+    if math.isnan(v):
+        return "NaN"
+    if math.isinf(v):
+        return "+Inf" if v > 0 else "-Inf"
+    return f"{v:g}"
 
 
 def _label_str(names: Sequence[str], values: Tuple[str, ...],
@@ -73,7 +86,7 @@ class _Metric:
         with self._lock:
             for k, v in sorted(self._vals.items()):
                 out.append(f"{self.name}{_label_str(self.labelnames, k)} "
-                           f"{float(v):g}")
+                           f"{_fmt_value(v)}")
         return out
 
 
@@ -163,7 +176,7 @@ class Histogram(_Metric):
                            f" {st['count']}")
                 out.append(f"{self.name}_sum"
                            f"{_label_str(self.labelnames, k)} "
-                           f"{st['sum']:g}")
+                           f"{_fmt_value(st['sum'])}")
                 out.append(f"{self.name}_count"
                            f"{_label_str(self.labelnames, k)} "
                            f"{st['count']}")

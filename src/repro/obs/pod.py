@@ -18,6 +18,8 @@ import socket
 from typing import List, Optional
 
 from .metrics import default_registry
+from .quality import SHADOW
+from .slo import MONITOR
 from .trace import TRACER, merge_chrome_traces
 
 
@@ -39,6 +41,8 @@ def local_snapshot() -> dict:
         "host": socket.gethostname(),
         "events": TRACER.chrome_events(),
         "metrics": default_registry().collect(),
+        "quality": SHADOW.snapshot(),
+        "slo": MONITOR.snapshot(),
     }
 
 
@@ -68,3 +72,25 @@ def merge_pod_trace(snapshots: List[dict], path: Optional[str] = None
     already carry wall-clock ``ts`` and per-process ``pid``)."""
     return merge_chrome_traces(
         [s.get("events") or [] for s in snapshots], path)
+
+
+def pod_quality_report(snapshots: List[dict]) -> str:
+    """Cross-host drift table from ``pod_snapshot`` output: one row per
+    (process, bundle) with the shadow RMSE EWMA and alert state — what
+    ``multihost --obs`` prints so drift on *any* host is visible from
+    the driver."""
+    lines = ["| process | key | rmse ewma | state | samples |",
+             "|---:|---|---:|---|---:|"]
+    rows = 0
+    for s in snapshots:
+        keys = ((s.get("quality") or {}).get("keys") or {})
+        for key, st in sorted(keys.items()):
+            rmse = st.get("rmse_ewma")
+            rmse_s = f"{rmse:.4g}" if rmse is not None else "-"
+            lines.append(f"| {s.get('process', '?')} | {key} | {rmse_s} "
+                         f"| {st.get('state', '?')} "
+                         f"| {st.get('samples', 0)} |")
+            rows += 1
+    if not rows:
+        return "(no shadow-quality samples on any host)"
+    return "\n".join(lines)

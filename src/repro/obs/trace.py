@@ -122,7 +122,9 @@ class Tracer:
         # every timestamp by this so per-process traces share a timeline
         self.epoch = time.time() - time.monotonic()
         self._tls = threading.local()
-        self._rings: List[tuple] = []  # (thread_name, tid, deque)
+        # (thread_name, tid, deque, drops) — drops is a 2-slot mutable
+        # counter: [entries evicted on wrap, evictions already published]
+        self._rings: List[tuple] = []
         self._reg_lock = threading.Lock()
         self._seq = itertools.count()
         self._pid_prefix = f"{os.getpid():x}."
@@ -138,8 +140,10 @@ class Tracer:
         self.enabled = False
 
     def clear(self) -> None:
+        """Drop recorded spans (drop *counters* survive: they are
+        cumulative eviction totals, not ring contents)."""
         with self._reg_lock:
-            for _, _, ring in self._rings:
+            for _, _, ring, _ in self._rings:
                 ring.clear()
 
     # -------------------------------------------------------- recording ---
@@ -149,15 +153,17 @@ class Tracer:
         return self._pid_prefix + str(next(self._seq))
 
     def _ring(self) -> tuple:
-        """This thread's ``(ring, tid, thread_name)`` — thread identity is
-        resolved once at ring registration, not per span record."""
+        """This thread's ``(ring, tid, thread_name, drops)`` — thread
+        identity is resolved once at ring registration, not per span
+        record."""
         state = getattr(self._tls, "state", None)
         if state is None:
             t = threading.current_thread()
             ring = deque(maxlen=self.ring_size)
-            state = self._tls.state = (ring, t.ident or 0, t.name)
+            drops = [0, 0]
+            state = self._tls.state = (ring, t.ident or 0, t.name, drops)
             with self._reg_lock:
-                self._rings.append((t.name, t.ident or 0, ring))
+                self._rings.append((t.name, t.ident or 0, ring, drops))
         return state
 
     def record(self, name: str, t0: float, t1: float, *, cat: str = "serve",
@@ -181,7 +187,9 @@ class Tracer:
         records — export copies before mutating."""
         # ring entries are plain tuples: building Span objects is deferred
         # to export so the hot path pays one tuple + one deque append
-        ring, tid, tname = self._ring()
+        ring, tid, tname, drops = self._ring()
+        if len(ring) == ring.maxlen:
+            drops[0] += 1  # the append below evicts the oldest entry
         ring.append((name, cat, t0, t1, trace, args, tid, tname))
 
     def instant(self, name: str, *, cat: str = "serve",
@@ -200,10 +208,42 @@ class Tracer:
         return _LiveSpan(self, name, cat, trace, args)
 
     # ----------------------------------------------------------- export ---
+    def drop_counts(self) -> Dict[str, int]:
+        """Per-thread-name totals of ring entries evicted on wrap.
+
+        A nonzero count means the exported trace is missing its oldest
+        spans for that thread — before this existed the truncation was
+        silent and a short-looking trace read as a short run."""
+        out: Dict[str, int] = {}
+        with self._reg_lock:
+            for name, _, _, drops in self._rings:
+                out[name] = out.get(name, 0) + drops[0]
+        return out
+
+    def publish_drop_counts(self) -> int:
+        """Fold eviction counts into ``repro_trace_dropped_total{thread}``
+        (delta since last publish; called from every export path so a
+        scrape or snapshot always reflects current truncation)."""
+        from . import metrics as _metrics
+        c = _metrics.counter("repro_trace_dropped_total",
+                             "trace ring entries evicted on wrap",
+                             ("thread",))
+        with self._reg_lock:
+            rings = list(self._rings)
+        published = 0
+        for name, _, _, drops in rings:
+            delta = drops[0] - drops[1]
+            if delta > 0:
+                drops[1] = drops[0]
+                c.inc(delta, thread=name)
+                published += delta
+        return published
+
     def events(self) -> List[Span]:
         """Snapshot every thread's ring, oldest-first per thread."""
+        self.publish_drop_counts()
         with self._reg_lock:
-            rings = [(name, tid, list(ring)) for name, tid, ring
+            rings = [(name, tid, list(ring)) for name, tid, ring, _
                      in self._rings]
         out: List[Span] = []
         for _, _, entries in rings:

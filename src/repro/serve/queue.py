@@ -59,7 +59,7 @@ class FlushPolicy:
 class ServeFuture:
     """Resolves to the engine-output rows ``[n, ...]`` for one request."""
 
-    __slots__ = ("_event", "_value", "_exc", "_queue", "_key")
+    __slots__ = ("_event", "_value", "_exc", "_queue", "_key", "trace")
 
     def __init__(self, queue: "ServeQueue", key: str):
         self._event = threading.Event()
@@ -67,6 +67,7 @@ class ServeFuture:
         self._exc: Optional[BaseException] = None
         self._queue = queue
         self._key = key
+        self.trace: Optional[str] = None  # obs trace id (when tracing)
 
     def done(self) -> bool:
         return self._event.is_set()
@@ -171,6 +172,34 @@ class ServeQueue:
         with self._cv:
             return list(self._pending)
 
+    # -------------------------------------------------------- liveness ---
+    def liveness(self) -> Dict[str, object]:
+        """Queue liveness for readiness probes (``/healthz``)."""
+        with self._cv:
+            t = self._thread
+            return {
+                "mode": "threaded" if t is not None else "thread-free",
+                "dispatcher_alive": bool(t is not None and t.is_alive()),
+                "stopping": self._stopping,
+                "pending_rows": self._rows_total,
+                "pending_keys": len(self._pending),
+            }
+
+    def healthy(self) -> bool:
+        """False when a started dispatcher thread has died (requests
+        would queue forever).  Thread-free queues are always healthy —
+        callers make their own progress."""
+        with self._cv:
+            t = self._thread
+            return t is None or (t.is_alive() and not self._stopping)
+
+    def snapshot(self) -> Dict[str, object]:
+        """Liveness plus every key's serve-stats snapshot (``/varz``)."""
+        with self._cv:
+            stats = dict(self._stats)
+        return {"liveness": self.liveness(),
+                "keys": {k: s.snapshot() for k, s in sorted(stats.items())}}
+
     # ----------------------------------------------------------- submit ---
     def submit(self, key: str, rows) -> ServeFuture:
         """Queue ``rows`` ([n, ...features], n >= 1) for bundle ``key``."""
@@ -182,6 +211,7 @@ class ServeQueue:
         fut = ServeFuture(self, key)
         t_sub = time.monotonic()
         trace = TRACER.new_trace_id() if TRACER.enabled else None
+        fut.trace = trace  # shadow scoring rides the same id
         req = _Request(key, x, n, fut, t_sub, current_ctx(), trace)
         deadline = t_sub + self.policy.block_timeout_s
         while True:

@@ -116,6 +116,11 @@ class ServeStats:
         self.flush_reasons: Counter = Counter()
         self.busy_s = 0.0         # wall time spent inside dispatches
         self._lat: Deque[float] = deque(maxlen=latency_window)
+        # (monotonic time, latency_s, ok) per resolved request — the SLO
+        # monitor's windowed burn-rate input.  Failures land with NaN
+        # latency (they never resolved, so they miss any latency target).
+        self._events: Deque[Tuple[float, float, bool]] = deque(
+            maxlen=max(4096, latency_window))
         # (monotonic time, rows) of recent submits: the adaptive flush
         # controller reads the observed arrival rate from this window
         self._arrivals: Deque[Tuple[float, int]] = deque(maxlen=256)
@@ -150,6 +155,7 @@ class ServeStats:
         reflect only work the mesh actually served — a key failing every
         batch must look broken on a dashboard, not healthy.
         """
+        now = time.monotonic()
         with self._lock:
             self.batches_failed += 1
             self.requests_failed += requests
@@ -158,6 +164,9 @@ class ServeStats:
             self.queue_depth_requests -= requests
             self.flush_reasons[reason] += 1
             self.busy_s += busy_s
+            nan = float("nan")
+            for _ in range(requests):
+                self._events.append((now, nan, False))
             depth_rows, depth_reqs = \
                 self.queue_depth_rows, self.queue_depth_requests
         self._m_batches_failed.inc(1, key=self.key)
@@ -184,6 +193,9 @@ class ServeStats:
             self.flush_reasons[reason] += 1
             self.busy_s += busy_s
             self._lat.extend(latencies_s)
+            now = time.monotonic()
+            for lat in latencies_s:
+                self._events.append((now, float(lat), True))
             ewma = self._bucket_lat.get(bucket)
             if ewma is None:
                 self._bucket_lat[bucket] = [float(busy_s), 1]
@@ -230,6 +242,18 @@ class ServeStats:
         """Snapshot of every bucket's (ewma_s, n_batches)."""
         with self._lock:
             return {b: (e[0], e[1]) for b, e in self._bucket_lat.items()}
+
+    def request_events(self, window_s: Optional[float] = None,
+                       now: Optional[float] = None):
+        """Recent per-request ``(t_monotonic, latency_s, ok)`` outcomes,
+        oldest first — the SLO monitor's burn-rate input.  ``window_s``
+        keeps only events newer than ``now - window_s``."""
+        with self._lock:
+            events = list(self._events)
+        if window_s is None:
+            return events
+        cutoff = (time.monotonic() if now is None else now) - window_s
+        return [e for e in events if e[0] >= cutoff]
 
     def arrival_rate_rows_s(self, now: float = None) -> float:
         """Observed submit rate (rows/s) over the recent arrival window.

@@ -423,6 +423,152 @@ def test_metrics_report_renders_markdown(tmp_path, capsys):
     assert "batch.apply" in out
 
 
+# --------------------------------------------- exposition edge cases (7) ----
+
+def test_dump_escapes_backslash_quote_newline():
+    from repro.obs.server import validate_exposition
+    reg = MetricsRegistry()
+    raw = 'a\\b"c\nd'
+    reg.counter("esc_total", "h", ("k",)).inc(1, k=raw)
+    text = reg.dump()
+    assert 'esc_total{k="a\\\\b\\"c\\nd"} 1' in text
+    # the validator's unescape recovers the original value exactly
+    # (backslash first, so \\n is a backslash + n, not a newline)
+    samples = [ln for ln in text.splitlines()
+               if ln.startswith("esc_total{")]
+    assert len(samples) == 1
+    validate_exposition(text)
+
+
+def test_dump_renders_nan_and_infinities():
+    import math
+    from repro.obs.server import validate_exposition
+    reg = MetricsRegistry()
+    g = reg.gauge("weird", "h", ("k",))
+    g.set(float("nan"), k="n")
+    g.set(float("inf"), k="p")
+    g.set(float("-inf"), k="m")
+    text = reg.dump()
+    assert 'weird{k="n"} NaN' in text
+    assert 'weird{k="p"} +Inf' in text
+    assert 'weird{k="m"} -Inf' in text
+    info = validate_exposition(text)
+    assert info["samples"] == 3
+    # %g would have emitted 'nan'/'inf', which Prometheus rejects
+    assert "} nan" not in text and "} inf" not in text
+
+
+def test_empty_registry_dumps_and_validates():
+    from repro.obs.server import validate_exposition
+    reg = MetricsRegistry()
+    assert validate_exposition(reg.dump()) == {"samples": 0,
+                                               "families": {}}
+    # registered-but-never-observed families still emit HELP/TYPE only
+    reg.counter("quiet_total", "h", ("k",))
+    info = validate_exposition(reg.dump())
+    assert info == {"samples": 0, "families": {"quiet_total": "counter"}}
+
+
+def test_histogram_dump_satisfies_exposition_contract():
+    from repro.obs.server import validate_exposition
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_s", "h", ("k",), buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 0.5, 7.0):
+        h.observe(v, k="a")
+    h.observe(2.5, k="b")
+    text = reg.dump()
+    # +Inf bucket == _count per labelset, buckets cumulative
+    assert 'lat_s_bucket{k="a",le="+Inf"} 4' in text
+    assert 'lat_s_count{k="a"} 4' in text
+    assert 'lat_s_bucket{k="b",le="0.1"} 0' in text
+    info = validate_exposition(text)
+    assert info["families"]["lat_s"] == "histogram"
+
+
+# ----------------------------------------------- ring drop counter (sat 1) ---
+
+def test_ring_eviction_counts_drops():
+    t = type(TRACER)(ring_size=4)
+    t.enable()
+    for i in range(10):
+        t.record(f"s{i}", 0.0, 1.0)
+    counts = t.drop_counts()
+    assert sum(counts.values()) == 6  # 10 recorded - 4 retained
+    t.clear()  # clear keeps the drop totals (they are cumulative)
+    assert sum(t.drop_counts().values()) == 6
+
+
+def test_publish_drop_counts_is_delta_based():
+    enable_tracing()
+    TRACER.clear()
+    c = default_registry().counter(
+        "repro_trace_dropped_total",
+        "spans evicted from a full per-thread trace ring", ("thread",))
+    import threading
+    label = threading.current_thread().name
+    TRACER.publish_drop_counts()   # flush any prior sessions' deltas
+    before = c.value(thread=label)
+    overflow = TRACER.ring_size + 5
+    for i in range(overflow):
+        TRACER.record(f"d{i}", 0.0, 1.0)
+    assert TRACER.publish_drop_counts() >= 5
+    assert c.value(thread=label) == before + 5
+    # publishing again without new evictions adds nothing (delta, not
+    # cumulative re-add)
+    TRACER.publish_drop_counts()
+    assert c.value(thread=label) == before + 5
+
+
+# ------------------------------------- report quantiles + --json (sat 2) ----
+
+def test_quantile_interpolation_from_buckets():
+    from repro.obs.metrics_report import quantile_from_buckets
+    # 10 obs uniform in (0,1], 10 in (1,2]: p50 = 1.0, p75 = 1.5
+    buckets = {1.0: 10, 2.0: 20, float("inf"): 20}
+    assert quantile_from_buckets(buckets, 20, 0.50) == pytest.approx(1.0)
+    assert quantile_from_buckets(buckets, 20, 0.75) == pytest.approx(1.5)
+    # first bucket interpolates from lower bound 0
+    assert quantile_from_buckets(buckets, 20, 0.25) == pytest.approx(0.5)
+    # quantile in the +Inf bucket clamps to the largest finite bound
+    buckets = {1.0: 10, float("inf"): 40}
+    assert quantile_from_buckets(buckets, 40, 0.99) == 1.0
+    assert quantile_from_buckets({}, 0, 0.5) is None
+
+
+def test_metrics_report_json_mode(tmp_path, capsys):
+    from repro.obs import metrics_report
+    reg = MetricsRegistry()
+    reg.counter("c_total", "h", ("k",)).inc(3, k="x")
+    h = reg.histogram("lat_seconds", "h", ("k",), buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 0.7, 0.9):
+        h.observe(v, k="x")
+    mpath = tmp_path / "metrics.json"
+    mpath.write_text(json.dumps(reg.collect()))
+    rc = metrics_report.main(["--metrics", str(mpath), "--json"])
+    assert rc == 0
+    doc = json.loads(capsys.readouterr().out)
+    snap = doc["snapshots"][0]
+    assert snap["metrics"]["c_total"]["values"][0]["value"] == 3.0
+    hq = snap["histogram_quantiles"]["lat_seconds"][0]
+    assert hq["count"] == 4
+    assert 0.0 < hq["p50"] <= hq["p90"] <= hq["p99"] <= 1.0
+
+
+def test_metrics_report_renders_quality_section(tmp_path, capsys):
+    from repro.obs import metrics_report
+    reg = MetricsRegistry()
+    reg.gauge("repro_quality_rmse", "h", ("key",)).set(0.02, key="b1")
+    reg.gauge("repro_quality_alert_state", "h", ("key",)).set(2, key="b1")
+    reg.counter("repro_quality_samples_total", "h",
+                ("key", "region")).inc(7, key="b1", region="r")
+    mpath = tmp_path / "metrics.json"
+    mpath.write_text(json.dumps(reg.collect()))
+    metrics_report.main(["--metrics", str(mpath), "--markdown"])
+    out = capsys.readouterr().out
+    assert "Surrogate quality (shadow-scored)" in out
+    assert "| b1 | 0.02 |" in out and "CRITICAL" in out
+
+
 # ------------------------------------------------- spawned 2-process pod ----
 
 def _traced_pod_worker():

@@ -1,0 +1,424 @@
+"""repro.obs quality/SLO/endpoint: shadow scoring against the accurate
+function, the hysteretic drift-alert machine, multi-window SLO burn
+rates over ServeStats, and the scrapeable HTTP endpoint.
+
+The region tests exercise the real sampling hooks: an ``approx_ml``
+region whose accurate function is the surrogate's own original forward,
+so the shadow replay's RMSE is ~0 on clean weights and the async path's
+``quality.shadow`` span rides the request's serve trace id.
+"""
+import json
+import math
+import urllib.error
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+from repro.obs import (CRITICAL, MONITOR, OK, SHADOW, SLO, WARN,
+                       AlertMachine, ObsServer, TRACER, ShadowScorer,
+                       enable_tracing, validate_exposition)
+from repro.serve import FlushPolicy, ServeQueue
+from repro.serve.stats import ServeStats
+
+
+@pytest.fixture(autouse=True)
+def _obs_reset():
+    """SHADOW/MONITOR/TRACER are process-global: leave them as these
+    tests found them (off, empty) so tier-1 neighbors see no stray
+    alert state."""
+    yield
+    SHADOW.disable()
+    SHADOW.rate = 0.0
+    SHADOW.flush(10)
+    SHADOW.reset()
+    MONITOR.untrack()
+    TRACER.enabled = False
+    TRACER.clear()
+
+
+def _bundle(tmp, seed=0):
+    from repro.nn import MLP
+    from repro.nn.serialize import save_model
+    net = MLP((1, 2), [16], 1)
+    return save_model(tmp / "m", net, net.init(jax.random.PRNGKey(seed)))
+
+
+def _self_region(tmp, mode, serving=None, n=4):
+    """A region whose accurate fn is the bundle's own forward: shadow
+    scoring must find (near-)zero error on clean weights."""
+    from repro.core import approx_ml, tensor_functor
+    from repro.nn.serialize import load_model
+    mp = _bundle(tmp)
+    net, params, _ = load_model(mp)
+    apply = jax.jit(net.apply)
+
+    def fn(x):
+        return {"out": apply(params, x)}
+
+    rngs = {"i": (0, n)}
+    region = approx_ml(
+        fn, name="quality_probe",
+        inputs={"x": (tensor_functor("qx: [i, 0:2] = ([i, 0:2])"), rngs)},
+        outputs={"out": (tensor_functor("qy: [i, 0:1] = ([i, 0:1])"),
+                         rngs)},
+        mode=mode, model=mp, serving=serving)
+    return mp, region
+
+
+def _rows(n, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, 2)).astype(
+        np.float32)
+
+
+# ---------------------------------------------------------- alert machine ---
+
+def test_alert_machine_needs_consecutive_breaches():
+    m = AlertMachine(breach_n=3, clear_n=5)
+    assert m.step(2.0, 0.5, 1.0) == OK
+    assert m.step(2.0, 0.5, 1.0) == OK
+    assert m.step(2.0, 0.5, 1.0) == CRITICAL  # third consecutive breach
+    assert m.transitions == 1
+
+
+def test_alert_machine_breach_counter_resets_on_ok():
+    m = AlertMachine(breach_n=3, clear_n=5)
+    m.step(2.0, 0.5, 1.0)
+    m.step(2.0, 0.5, 1.0)
+    m.step(0.1, 0.5, 1.0)  # dips below: streak broken
+    m.step(2.0, 0.5, 1.0)
+    assert m.step(2.0, 0.5, 1.0) == OK  # only 2 consecutive again
+
+
+def test_alert_machine_hysteresis_and_clear():
+    m = AlertMachine(breach_n=1, clear_n=3, hysteresis=0.8)
+    assert m.step(1.5, 0.5, 1.0) == CRITICAL
+    # latched CRITICAL shrinks its threshold to 0.8: 0.9 is still
+    # critical, so the clear streak never starts
+    for _ in range(5):
+        assert m.step(0.9, 0.5, 1.0) == CRITICAL
+    # truly below: clear_n consecutive evaluations de-escalate (to the
+    # candidate level, here WARN since 0.6 >= 0.5)
+    m.step(0.6, 0.5, 1.0)
+    m.step(0.6, 0.5, 1.0)
+    assert m.step(0.6, 0.5, 1.0) == WARN
+
+
+def test_alert_machine_without_budget_never_alerts():
+    m = AlertMachine(breach_n=1)
+    for _ in range(10):
+        assert m.step(1e9, None, None) == OK
+
+
+# ---------------------------------------------------------- shadow scorer ---
+
+def test_observe_folds_ewma_and_drives_alert():
+    s = ShadowScorer()
+    s.set_budget("k", 0.1)  # warn at 0.05, critical at 0.1
+    assert s.observe("k", rmse=0.01) == OK
+    # EWMA: 0.01 + 0.25 * (0.09 - 0.01) = 0.03
+    s.observe("k", rmse=0.09)
+    snap = s.snapshot()["keys"]["k"]
+    assert snap["rmse_ewma"] == pytest.approx(0.03)
+    assert snap["samples"] == 2
+    for _ in range(20):
+        state = s.observe("k", rmse=5.0)
+    assert state == CRITICAL and s.worst_state() == CRITICAL
+    assert s.state("other") == OK  # unseen keys are OK
+
+
+def test_submit_scores_thunks_on_worker():
+    s = ShadowScorer(rate=1.0)
+    yp = np.ones((4, 1), np.float32)
+    yr = np.zeros((4, 1), np.float32)
+    assert s.submit("k", pred=lambda: yp, ref=lambda: yr, rows=4)
+    assert s.flush(30)
+    snap = s.snapshot()["keys"]["k"]
+    assert snap["rmse_ewma"] == pytest.approx(1.0)
+    assert snap["max_abs_ewma"] == pytest.approx(1.0)
+    assert snap["rows"] == 4
+    s.stop()
+
+
+def test_submit_backlog_drops_are_counted():
+    from repro.obs import default_registry
+    s = ShadowScorer(rate=1.0, max_backlog=0)  # every submit overflows
+    dropped = default_registry().counter(
+        "repro_quality_dropped_total", "", ("key", "reason"))
+    before = dropped.value(key="kb", reason="backlog")
+    assert not s.submit("kb", pred=lambda: 0, ref=lambda: 0)
+    assert dropped.value(key="kb", reason="backlog") == before + 1
+
+
+def test_submit_ref_error_drops_not_kills_worker():
+    from repro.obs import default_registry
+    s = ShadowScorer(rate=1.0)
+
+    def boom():
+        raise RuntimeError("replay failed")
+
+    dropped = default_registry().counter(
+        "repro_quality_dropped_total", "", ("key", "reason"))
+    before = dropped.value(key="ke", reason="error")
+    s.submit("ke", pred=lambda: np.zeros(2), ref=boom)
+    assert s.flush(30)
+    assert dropped.value(key="ke", reason="error") == before + 1
+    # the worker survived: a good sample still scores
+    s.submit("ke", pred=lambda: np.zeros(2), ref=lambda: np.zeros(2))
+    assert s.flush(30)
+    assert s.snapshot()["keys"]["ke"]["samples"] == 1
+    s.stop()
+
+
+def test_sample_rate_zero_and_one():
+    s = ShadowScorer()
+    assert not s.enabled and not s.sample()
+    s.enable(rate=1.0)
+    assert all(s.sample() for _ in range(32))
+    s.disable()
+    assert not s.sample()
+
+
+# ------------------------------------------------------------ region hooks ---
+
+def test_sync_region_shadow_scores_near_zero(tmp_path):
+    mp, region = _self_region(tmp_path, "infer")
+    SHADOW.enable(rate=1.0)
+    SHADOW.set_budget(mp, 0.05)
+    region(x=_rows(4))
+    assert SHADOW.flush(60)
+    snap = SHADOW.snapshot()["keys"][mp]
+    assert snap["samples"] == 1 and snap["rows"] == 4
+    assert snap["rmse_ewma"] < 1e-5  # surrogate == accurate fn
+    assert snap["state"] == OK
+
+
+def test_async_region_shadow_span_rides_serve_trace(tmp_path):
+    q = ServeQueue(FlushPolicy(max_batch_rows=1 << 30))
+    mp, region = _self_region(tmp_path, "infer_async", serving=q)
+    enable_tracing()
+    TRACER.clear()
+    SHADOW.enable(rate=1.0)
+    h = region(x=_rows(4, seed=1))
+    q.flush(mp)
+    h.result(30)
+    assert SHADOW.flush(60)
+    spans = TRACER.events()
+    sub = next(s for s in spans if s.name == "queue.submit")
+    shadow = next(s for s in spans if s.name == "quality.shadow")
+    assert sub.trace is not None and shadow.trace == sub.trace
+    assert shadow.thread == "repro-shadow-score"
+    assert SHADOW.snapshot()["keys"][mp]["rmse_ewma"] < 1e-5
+
+
+def test_disabled_shadow_never_samples_regions(tmp_path):
+    mp, region = _self_region(tmp_path, "infer")
+    SHADOW.disable()
+    region(x=_rows(4))
+    assert mp not in SHADOW.snapshot()["keys"]
+
+
+# ------------------------------------------------------- stats event ring ---
+
+def test_request_events_window_and_failures():
+    st = ServeStats("k")
+    st.on_batch(requests=2, rows=4, bucket=8, reason="t", busy_s=0.0,
+                latencies_s=[0.1, 0.2])
+    st.on_failure(requests=1, rows=2, reason="engine-error", busy_s=0.0)
+    evs = st.request_events()
+    assert len(evs) == 3
+    oks = [e for e in evs if e[2]]
+    bad = [e for e in evs if not e[2]]
+    assert sorted(e[1] for e in oks) == [0.1, 0.2]
+    assert len(bad) == 1 and math.isnan(bad[0][1])
+    # window filter: nothing is newer than now - 0 seconds ago
+    t_latest = max(e[0] for e in evs)
+    assert st.request_events(window_s=1e-9, now=t_latest + 10) == []
+    assert len(st.request_events(window_s=1e9, now=t_latest)) == 3
+
+
+# ------------------------------------------------------------ SLO monitor ---
+
+class _StubStats:
+    """request_events-shaped stub: (t, latency_s, ok) tuples."""
+
+    def __init__(self, events):
+        self._events = events
+
+    def request_events(self, window_s=None, now=None):
+        if window_s is None:
+            return list(self._events)
+        return [e for e in self._events if e[0] >= now - window_s]
+
+
+def test_slo_burn_rates_and_critical():
+    now = 1000.0
+    slo = SLO(latency_threshold_s=0.1, latency_target=0.9,
+              availability_target=0.9, windows_s=(10.0, 100.0),
+              warn_burn=1.0, crit_burn=5.0, min_events=4)
+    # 20 requests in the last 10s, half too slow: err 0.5 / budget 0.1
+    events = [(now - 0.1 * i, 0.2 if i % 2 else 0.01, True)
+              for i in range(20)]
+    MONITOR.track("kslo", _StubStats(events), slo)
+    r = MONITOR.evaluate(now=now)["kslo"]["latency"]
+    assert r["burn"]["10s"] == pytest.approx(5.0)
+    assert r["burn"]["100s"] == pytest.approx(5.0)
+    assert r["value"] == pytest.approx(5.0)
+    # breach_n=2 on the SLO machines: second evaluation latches CRITICAL
+    MONITOR.evaluate(now=now)
+    assert MONITOR.states()["kslo"]["latency"] == CRITICAL
+    # availability untouched: every request succeeded
+    assert MONITOR.states()["kslo"]["availability"] == OK
+
+
+def test_slo_min_events_guard_and_both_windows_must_burn():
+    now = 1000.0
+    slo = SLO(latency_threshold_s=0.1, latency_target=0.9,
+              windows_s=(10.0, 100.0), min_events=10)
+    # all 8 requests slow AND recent: short window has too few events
+    # (burn 0), long window has too few events (burn 0) -> value 0
+    events = [(now - 0.1 * i, 9.9, True) for i in range(8)]
+    MONITOR.track("kmin", _StubStats(events), slo)
+    r = MONITOR.evaluate(now=now)["kmin"]["latency"]
+    assert r["value"] == 0.0
+    # 30 slow requests, but all older than the short window: the long
+    # window burns, the short window is empty -> min is 0 (no alert)
+    events = [(now - 50.0 - 0.1 * i, 9.9, True) for i in range(30)]
+    MONITOR.track("kold", _StubStats(events), slo)
+    r = MONITOR.evaluate(now=now)["kold"]["latency"]
+    assert r["burn"]["100s"] > 1.0 and r["burn"]["10s"] == 0.0
+    assert r["value"] == 0.0
+
+
+def test_slo_failed_requests_burn_availability():
+    now = 1000.0
+    slo = SLO(availability_target=0.9, windows_s=(10.0, 100.0),
+              min_events=4)
+    events = [(now - 0.1 * i, float("nan"), False) for i in range(10)]
+    MONITOR.track("kav", _StubStats(events), slo)
+    r = MONITOR.evaluate(now=now)["kav"]
+    assert r["availability"]["value"] == pytest.approx(10.0)  # 1.0 / 0.1
+    assert r["availability"]["budget_remaining"] == 0.0
+    # NaN latency counts against the latency objective too
+    assert r["latency"]["value"] > 0.0
+
+
+# ------------------------------------------------------------ obs server ----
+
+def _get(url):
+    try:
+        with urllib.request.urlopen(url, timeout=10) as r:
+            return r.status, r.read().decode("utf-8")
+    except urllib.error.HTTPError as e:
+        return e.code, e.read().decode("utf-8")
+
+
+def test_obs_server_routes_and_healthz_flip():
+    server = ObsServer().start()
+    try:
+        for route in ("/", "/metrics", "/varz", "/tracez"):
+            code, _ = _get(server.url(route))
+            assert code == 200, route
+        code, _ = _get(server.url("/nope"))
+        assert code == 404
+        code, body = _get(server.url("/healthz"))
+        assert code == 200 and json.loads(body)["status"] == "ok"
+        # a CRITICAL drift alert turns readiness into 503
+        SHADOW.set_budget("kbad", 0.01)
+        for _ in range(5):
+            SHADOW.observe("kbad", rmse=9.0)
+        assert SHADOW.state("kbad") == CRITICAL
+        code, body = _get(server.url("/healthz"))
+        detail = json.loads(body)
+        assert code == 503 and "quality:kbad" in detail["critical"]
+        # and /metrics stays scrapeable + valid while unhealthy
+        code, text = _get(server.url("/metrics"))
+        assert code == 200
+        assert validate_exposition(text)["samples"] > 0
+        assert 'repro_quality_rmse{key="kbad"}' in text
+    finally:
+        server.stop()
+
+
+def test_obs_server_dead_queue_unready():
+    class DeadQueue:
+        def healthy(self):
+            return False
+
+        def snapshot(self):
+            return {}
+
+    server = ObsServer().start().watch_queue("dead", DeadQueue())
+    try:
+        code, body = _get(server.url("/healthz"))
+        assert code == 503
+        assert "queue:dead" in json.loads(body)["critical"]
+    finally:
+        server.stop()
+
+
+def test_queue_healthy_and_snapshot(tmp_path):
+    mp = _bundle(tmp_path)
+    q = ServeQueue(FlushPolicy(max_batch_rows=1 << 30))
+    assert q.healthy()  # thread-free queues are always healthy
+    q.submit(mp, _rows(2)).result(30)
+    snap = q.snapshot()
+    assert mp in snap["keys"] and snap["liveness"]["mode"] == "thread-free"
+    q2 = ServeQueue(FlushPolicy(max_batch_rows=1 << 30,
+                                max_delay_s=0.005)).start()
+    try:
+        assert q2.healthy() and q2.liveness()["dispatcher_alive"]
+    finally:
+        q2.stop()
+    # a cleanly-stopped queue reverts to thread-free (callers flush
+    # inline), which is healthy again
+    assert q2.healthy() and q2.liveness()["mode"] == "thread-free"
+
+
+def test_varz_carries_quality_and_slo():
+    SHADOW.set_budget("kv", 1.0)
+    SHADOW.observe("kv", rmse=0.5)
+    MONITOR.track("kv", _StubStats([]), SLO())
+    server = ObsServer().start()
+    try:
+        _, body = _get(server.url("/varz"))
+        doc = json.loads(body)
+        assert doc["quality"]["keys"]["kv"]["rmse_ewma"] == 0.5
+        assert "kv" in doc["slo"]["keys"]
+        assert "repro_quality_rmse" in doc["metrics"]
+    finally:
+        server.stop()
+
+
+# ----------------------------------------------------- exposition parsing ---
+
+def test_validate_exposition_rejects_malformed():
+    with pytest.raises(ValueError, match="unparseable"):
+        validate_exposition("no value here\n")
+    with pytest.raises(ValueError, match="invalid sample value"):
+        validate_exposition("m 12x\n")
+    with pytest.raises(ValueError, match="malformed label"):
+        validate_exposition('m{k=unquoted} 1\n')
+    with pytest.raises(ValueError, match="duplicate"):
+        validate_exposition('m{k="a"} 1\nm{k="a"} 2\n')
+
+
+def test_validate_exposition_histogram_contract():
+    ok = ('# TYPE h histogram\n'
+          'h_bucket{le="1"} 1\nh_bucket{le="+Inf"} 2\n'
+          'h_sum 3.5\nh_count 2\n')
+    assert validate_exposition(ok)["families"] == {"h": "histogram"}
+    with pytest.raises(ValueError, match="missing _sum"):
+        validate_exposition('# TYPE h histogram\n'
+                            'h_bucket{le="+Inf"} 1\nh_count 1\n')
+    with pytest.raises(ValueError, match="!= _count"):
+        validate_exposition('# TYPE h histogram\n'
+                            'h_bucket{le="+Inf"} 1\nh_sum 1\nh_count 2\n')
+    with pytest.raises(ValueError, match="not cumulative"):
+        validate_exposition('# TYPE h histogram\n'
+                            'h_bucket{le="1"} 5\nh_bucket{le="+Inf"} 2\n'
+                            'h_sum 1\nh_count 2\n')
+    with pytest.raises(ValueError, match=r"missing le=.\+Inf"):
+        validate_exposition('# TYPE h histogram\n'
+                            'h_bucket{le="1"} 1\nh_sum 1\nh_count 1\n')
