@@ -48,6 +48,12 @@ SHADOW_RATE = float(os.environ.get("REPRO_SHADOW_RATE", "") or 0.05)
 #: within this many shadow samples
 SHADOW_ALERT_SAMPLES = 20
 SHADOW_RMSE_BUDGET = 0.05
+#: resilience gate: the breaker board enabled (idle, CLOSED) must keep
+#: >= this fraction of the board-disabled rows/s on the coalesced path
+FAULT_IDLE_MIN_RATIO = 0.98
+#: injected dispatch faults must trip the breaker OPEN within this many
+#: failing batches
+FAULT_OPEN_BATCHES = 8
 
 
 def _bundle(path):
@@ -545,6 +551,255 @@ def shadow_alert_check():
         SHADOW.enabled = was_shadow
 
 
+def fault_overhead_check(fast=False, pairs=50):
+    """Gate the breaker's idle cost on the serving hot path.
+
+    A CLOSED breaker is pure overhead: one ``allow()`` per request
+    (a lock acquire + two branches) in ``MLRegion._infer_async`` plus
+    one ``record_success`` per dispatched batch in the batcher.  The
+    gate runs the coalesced region path with the :data:`BREAKERS` board
+    toggled every other run — the same interleaved-pair min/min
+    methodology as :func:`overhead_check` (see there for why min/min +
+    alternating within-pair order + paused GC) — and fails if the
+    enabled side retains less than :data:`FAULT_IDLE_MIN_RATIO` of the
+    disabled side's rows/s.
+    """
+    import gc
+    import tempfile
+
+    from repro.apps import binomial
+    from repro.dist.sharding import use_mesh
+    from repro.launch.mesh import make_local_mesh
+    from repro.obs import SHADOW, TRACER, disable_tracing
+    from repro.resilience import BREAKERS
+    from repro.serve import FlushPolicy, ServeQueue
+
+    n_callers = 16 if fast else 32
+    rows_per_call = 8
+    total = n_callers * rows_per_call
+    tmp = pathlib.Path(tempfile.mkdtemp(prefix="serve_fault_bench_"))
+    mp = _bundle(tmp / "surrogate")
+    mesh = make_local_mesh((len(jax.devices()), 1))
+    queue = ServeQueue(FlushPolicy(max_batch_rows=total,
+                                   max_pending_rows=4 * total))
+    region = binomial.make_region(rows_per_call, mode="infer_async",
+                                  model=mp, serving=queue)
+    opts = binomial.make_inputs(total, seed=13)
+    chunks = [opts[i:i + rows_per_call]
+              for i in range(0, total, rows_per_call)]
+
+    def run_once():
+        handles = [region(opts=c) for c in chunks]
+        queue.flush(mp, reason="bench")
+        for h in handles:
+            h.result(30)
+
+    was_traced, was_shadow = TRACER.enabled, SHADOW.enabled
+    was_breaker = BREAKERS.enabled
+    offs, ons = [], []
+    try:
+        with use_mesh(mesh):
+            disable_tracing()
+            SHADOW.enabled = False
+            BREAKERS.enabled = True
+            _measure(run_once, reps=1, warmup=3)  # compile outside timing
+            gc.disable()
+            try:
+                for i in range(pairs):
+                    halves = [(False, offs), (True, ons)]
+                    if i % 2:
+                        halves.reverse()
+                    for on, times in halves:
+                        BREAKERS.enabled = on
+                        t0 = time.perf_counter()
+                        run_once()
+                        times.append(time.perf_counter() - t0)
+                    if i % 10 == 9:
+                        gc.collect()
+            finally:
+                gc.enable()
+    finally:
+        TRACER.enabled = was_traced
+        SHADOW.enabled = was_shadow
+        BREAKERS.enabled = was_breaker
+        BREAKERS.reset(mp)
+    ratio = min(offs) / min(ons)
+    print(f"[breaker idle overhead] breaker-enabled serving retains "
+          f"{ratio * 100:.1f}% of breaker-disabled rows/s over {pairs} "
+          f"interleaved pairs (off {min(offs) * 1e3:.3f}ms / on "
+          f"{min(ons) * 1e3:.3f}ms)", flush=True)
+    if ratio < FAULT_IDLE_MIN_RATIO:
+        raise SystemExit(
+            f"breaker idle overhead gate FAILED: enabled/disabled "
+            f"rows/s ratio {ratio:.3f} < {FAULT_IDLE_MIN_RATIO} (an idle "
+            f"breaker costs more than "
+            f"{100 * (1 - FAULT_IDLE_MIN_RATIO):.0f}%)")
+    return ratio
+
+
+def fault_drill_check():
+    """Injected dispatch faults must trip the breaker and lose nothing.
+
+    Drives the breaker through its full CLOSED → OPEN → HALF_OPEN →
+    CLOSED cycle end-to-end through the public serving path:
+
+      1. clean phase — batches through the queue resolve finite and the
+         breaker stays CLOSED;
+      2. fault phase — ``engine.apply:raise:every=1`` makes every batch
+         dispatch fail.  Every handle must still resolve (zero-lost:
+         ``AsyncRegionResult.result`` degrades to the accurate path) and
+         the breaker must trip OPEN within :data:`FAULT_OPEN_BATCHES`
+         batches; while OPEN, submits short-circuit to the accurate
+         path without touching the queue at all;
+      3. recovery phase — faults cleared, the cooldown elapses, probe
+         traffic closes the breaker again.
+
+    The cycle must be observable: an ``ObsServer`` scrape during the
+    OPEN phase must carry ``repro_resilience_breaker_state``, the
+    transition counter and the fallback counter (and validate as
+    Prometheus text).  Prints time-to-open, the measured fallback
+    latency cost, and time-to-recover for EXPERIMENTS.md.
+    """
+    import tempfile
+    import urllib.request
+
+    from repro.core import approx_ml, tensor_functor
+    from repro.obs import ObsServer, validate_exposition
+    from repro.resilience import BREAKERS, FAULTS, BreakerPolicy
+    from repro.resilience.breaker import CLOSED, OPEN
+    from repro.serve import FlushPolicy, ServeQueue
+
+    rows_per_call, n_callers = 8, 8
+    tmp = pathlib.Path(tempfile.mkdtemp(prefix="serve_fault_drill_"))
+    mp = _bundle(tmp / "surrogate")
+    rngs = {"i": (0, rows_per_call)}
+    fin = tensor_functor("fin: [i, 0:5] = ([i, 0:5])")
+    fout = tensor_functor("fout: [i, 0:1] = ([i, 0:1])")
+    queue = ServeQueue(FlushPolicy(max_batch_rows=1024))
+    region = approx_ml(lambda x: {"out": x[:, :1] * 2.0},
+                       name="fault_drill", inputs={"x": (fin, rngs)},
+                       outputs={"out": (fout, rngs)},
+                       mode="infer_async", model=mp, serving=queue)
+    cooldown = 2.0
+    breaker = BREAKERS.configure(mp, BreakerPolicy(
+        failure_threshold=0.5, ewma_alpha=0.5, min_samples=4,
+        open_cooldown_s=cooldown, probe_n=2, probe_every=1))
+    rng = np.random.default_rng(7)
+    chunks = [rng.standard_normal((rows_per_call, 5)).astype(np.float32)
+              for _ in range(n_callers)]
+    submitted = resolved = 0
+
+    def run_batch():
+        nonlocal submitted, resolved
+        handles = [region(x=c) for c in chunks]
+        submitted += len(handles)
+        outs = []
+        queue.flush(mp, reason="bench")
+        for h in handles:
+            out = h.result(30)
+            if not np.all(np.isfinite(np.asarray(out["out"]))):
+                raise SystemExit("fault drill FAILED: non-finite rows "
+                                 "reached a caller")
+            outs.append(out)
+        resolved += len(outs)
+        return handles
+
+    was_breaker = BREAKERS.enabled
+    BREAKERS.enabled = True
+    server = ObsServer().start()
+    try:
+        # 1. clean phase: surrogate serves, breaker stays CLOSED
+        for _ in range(3):
+            run_batch()
+        if breaker.state != CLOSED:
+            raise SystemExit(f"fault drill FAILED: breaker is "
+                             f"{breaker.state} after clean traffic")
+
+        # 2. fault phase: every dispatch raises; handles degrade to the
+        #    accurate path and the failure EWMA trips the breaker
+        FAULTS.configure("engine.apply:raise:every=1")
+        t0 = time.perf_counter()
+        open_after = None
+        for batch in range(FAULT_OPEN_BATCHES):
+            run_batch()
+            if breaker.state != CLOSED:
+                open_after = batch + 1
+                break
+        time_to_open = time.perf_counter() - t0
+        snap = breaker.snapshot()
+        if open_after is None:
+            raise SystemExit(
+                f"fault drill FAILED: breaker still CLOSED after "
+                f"{FAULT_OPEN_BATCHES} all-failing batches ({snap})")
+        print(f"[fault drill] tripped {snap['state']} after {open_after} "
+              f"failing batch(es) in {time_to_open * 1e3:.0f}ms "
+              f"(ewma={snap['ewma']})", flush=True)
+
+        # while OPEN every submit short-circuits: accurate-path answers,
+        # nothing enqueued.  Time it — this is the fallback latency cost.
+        t0 = time.perf_counter()
+        handles = run_batch()
+        fallback_ms = (time.perf_counter() - t0) * 1e3
+        if any(h.deferred() for h in handles):
+            raise SystemExit("fault drill FAILED: an OPEN breaker let a "
+                             "request reach the serve queue")
+        if queue.depth() != 0:
+            raise SystemExit(f"fault drill FAILED: {queue.depth()} rows "
+                             f"parked on the queue while OPEN")
+        print(f"[fault drill] OPEN short-circuit: {n_callers} calls "
+              f"served accurately in {fallback_ms:.0f}ms, queue untouched",
+              flush=True)
+
+        # the cycle must be scrapeable while it is happening
+        with urllib.request.urlopen(server.url("/metrics"),
+                                    timeout=10) as r:
+            text = r.read().decode("utf-8")
+        validate_exposition(text)
+        for family in ("repro_resilience_breaker_state{",
+                       "repro_resilience_breaker_transitions_total{",
+                       "repro_resilience_fallback_total{",
+                       "repro_resilience_faults_injected_total{"):
+            if family not in text:
+                raise SystemExit(f"fault drill FAILED: /metrics has no "
+                                 f"{family.rstrip('{')} samples")
+
+        # 3. recovery: faults off, cooldown elapses, probes re-close it
+        FAULTS.clear()
+        t0 = time.perf_counter()
+        time.sleep(cooldown + 0.05)
+        recovered_after = None
+        for batch in range(6):
+            run_batch()
+            if breaker.state == CLOSED:
+                recovered_after = batch + 1
+                break
+        time_to_recover = time.perf_counter() - t0
+        if recovered_after is None:
+            raise SystemExit(f"fault drill FAILED: breaker never closed "
+                             f"after recovery ({breaker.snapshot()})")
+        if breaker.state == OPEN:
+            raise SystemExit("fault drill FAILED: breaker re-opened on "
+                             "clean probe traffic")
+        print(f"[fault drill] recovered CLOSED after {recovered_after} "
+              f"probe batch(es), {time_to_recover:.2f}s past fault "
+              f"clear (cooldown {cooldown}s)", flush=True)
+
+        if resolved != submitted:
+            raise SystemExit(f"fault drill FAILED: {submitted} submitted "
+                             f"but only {resolved} resolved")
+        print(f"[fault drill] OK: {submitted}/{submitted} requests "
+              f"resolved finite across the full "
+              f"CLOSED→OPEN→HALF_OPEN→CLOSED cycle; zero lost", flush=True)
+        return {"time_to_open_s": time_to_open,
+                "fallback_ms": fallback_ms,
+                "time_to_recover_s": time_to_recover}
+    finally:
+        server.stop()
+        FAULTS.clear()
+        BREAKERS.enabled = was_breaker
+        BREAKERS.reset(mp)
+
+
 def _markdown(rows, model_err):
     kv = dict(item.split("=", 1) for item in rows[0][2].split(";"))
     out = ["### Serving throughput (8-device host mesh)", "",
@@ -589,6 +844,13 @@ def main():
                          f"{SHADOW_MIN_RATIO:.0%} of unsampled rows/s) and "
                          "prove injected weight corruption fires the "
                          "CRITICAL drift alert")
+    ap.add_argument("--fault-check", action="store_true",
+                    help="gate breaker idle cost (enabled must retain "
+                         f">= {FAULT_IDLE_MIN_RATIO:.0%} of disabled "
+                         "rows/s) and drive the full fault drill: "
+                         "injected dispatch faults trip the breaker "
+                         "OPEN, zero requests lost, recovery observable "
+                         "on /metrics")
     args = ap.parse_args()
     if args.trace:
         from repro.obs import enable_tracing
@@ -613,6 +875,9 @@ def main():
         print(f"[serve smoke] OK: {speedup:.2f}x coalesced over per-call")
     if args.overhead_check:
         overhead_check(fast=args.fast)
+    if args.fault_check:
+        fault_overhead_check(fast=args.fast)
+        fault_drill_check()
     if args.shadow_check:
         shadow_overhead_check(fast=args.fast)
         shadow_alert_check()

@@ -254,6 +254,18 @@ class InferenceEngine:
                 donate = True  # the padded copy is ours, not the caller's
         if isinstance(x, jax.core.Tracer):
             donate = False  # in-trace degrade: nothing to donate
+        fault = None
+        if not isinstance(x, jax.core.Tracer):
+            from repro.resilience.faults import FAULTS
+            if FAULTS.enabled:
+                # raise/stall act inside fire(); nan/inf/corrupt come back
+                # as a rule for us to apply around the compute below
+                fault = FAULTS.fire("engine.apply", key=self.path)
+                if fault is not None and fault.mode == "corrupt":
+                    # persistent until reload — drives the shadow scorer
+                    # (and through it the breaker's quality trip)
+                    self.params = jax.tree_util.tree_map(
+                        lambda p: p + fault.scale, self.params)
         fn = self._apply_for(ctx, donate=donate)
         x = self._place(x, ctx)
         if TRACER.enabled and not isinstance(x, jax.core.Tracer):
@@ -267,6 +279,10 @@ class InferenceEngine:
             self._seen_shapes.add(shape_key)
         else:
             y = fn(self.params, x)
+        if fault is not None and fault.mode in ("nan", "inf"):
+            # eager elementwise op: poisons every row while preserving
+            # the output's sharding (works on global pod arrays too)
+            y = y * fault.value
         # a full-bucket batch (the pod path's pre-padded global arrays)
         # skips the slice: slicing a non-addressable array outside jit
         # raises, and [:n] of n rows is the identity anyway

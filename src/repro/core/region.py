@@ -40,7 +40,9 @@ from repro.core.database import SurrogateDB
 from repro.core.engine import InferenceEngine
 from repro.core.functor import TensorFunctor
 from repro.core.tensor_map import TensorMap
+from repro.obs import TRACER
 from repro.obs.quality import SHADOW
+from repro.resilience.breaker import BREAKERS
 
 
 def _is_traced(*arrays):
@@ -73,7 +75,20 @@ class AsyncRegionResult:
 
     def result(self, timeout: Optional[float] = None) -> dict:
         if self._done is None:
-            Y = self._future.result(timeout)
+            try:
+                Y = self._future.result(timeout)
+            except TimeoutError:
+                raise  # not a surrogate failure: the caller set the budget
+            except Exception:
+                # zero-lost contract: a failed dispatch (injected fault,
+                # non-finite screen, dead dispatcher) degrades to the
+                # accurate path instead of surfacing the serve error
+                region = self._region
+                if not (BREAKERS.enabled and region.model_path):
+                    raise
+                BREAKERS.record_failure(region.model_path)
+                self._done = region._fallback(self._arrays, "result")
+                return self._done
             self._done = self._region._bridge_from_jit(Y, self._arrays)
         return self._done
 
@@ -170,9 +185,31 @@ class MLRegion:
         in_shape = tuple(eng.spec["in_shape"])
         return eng, X.reshape((-1,) + in_shape[1:]).astype(jnp.float32)
 
+    def _fallback(self, arrays: dict, path: str) -> dict:
+        """Serve this invocation from the accurate path (breaker OPEN or
+        a dispatch failure), wearing the surrogate's output contract."""
+        BREAKERS.note_fallback(self.model_path, path)
+        with TRACER.span("resilience.fallback", cat="region",
+                         args={"region": self.name, "key": self.model_path,
+                               "path": path}):
+            return self._accurate(arrays, collect=False)
+
     def _infer(self, arrays: dict):
-        eng, Xb = self._rows_in(arrays)
-        Y = eng(Xb)
+        traced = _is_traced(arrays)
+        use_breaker = (BREAKERS.enabled and self.model_path is not None
+                       and not traced)
+        if use_breaker and not BREAKERS.allow(self.model_path):
+            return self._fallback(arrays, "infer")
+        try:
+            eng, Xb = self._rows_in(arrays)
+            Y = eng(Xb)
+        except Exception:
+            if not use_breaker:
+                raise
+            BREAKERS.record_failure(self.model_path)
+            return self._fallback(arrays, "infer")
+        if use_breaker:
+            BREAKERS.record_success(self.model_path)
         if SHADOW.enabled and not _is_traced(arrays, Xb) and SHADOW.sample():
             self._shadow_submit(arrays, rows=int(Xb.shape[0]), Y=Y)
         return self._bridge_from_jit(Y, arrays)
@@ -184,6 +221,13 @@ class MLRegion:
         if _is_traced(arrays):
             return AsyncRegionResult(self, arrays,
                                      resolved=self._infer(arrays))
+        if (BREAKERS.enabled and self.model_path is not None
+                and not BREAKERS.allow(self.model_path)):
+            # breaker OPEN (or HALF_OPEN non-probe): resolve through the
+            # accurate path immediately, same handle contract
+            return AsyncRegionResult(
+                self, arrays,
+                resolved=self._fallback(arrays, "infer_async"))
         eng, Xb = self._rows_in(arrays)
         del eng  # resolved for bundle load/reload; batcher re-gets per batch
         fut = self.serving.submit(self.model_path, Xb)

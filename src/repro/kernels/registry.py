@@ -256,6 +256,11 @@ def dispatch(spec: KernelSpec, problem: dict, arrays: tuple, *,
     interpret mode off-TPU) the kernel path runs with trace-time
     resolved tunables; otherwise the jnp oracle serves the call.
     """
+    from repro.resilience.faults import FAULTS
+    if FAULTS.enabled:
+        # dispatch runs at jit trace time, so a raise here surfaces as a
+        # compile failure on the serve path (once per shape, not per call)
+        FAULTS.fire("kernel.dispatch", key=spec.name)
     on_tpu = jax.default_backend() == "tpu"
     use_kernel = force_kernel or on_tpu
     if use_kernel and spec.supports is not None:

@@ -39,7 +39,12 @@ def load_model(path):
     net = from_spec(spec)
     z = np.load(path / "params.npz")
     flat = [jax.numpy.asarray(z[f"p{i}"]) for i in range(len(z.files))]
-    ref = net.init(jax.random.PRNGKey(0))
+    # only the treedef is needed to unflatten the saved leaves: trace the
+    # init abstractly instead of running it.  A real init executes device
+    # RNG, which queues behind any in-flight collective — a degraded pod
+    # host must be able to load a bundle while a torn collective is still
+    # pending on its devices (see ServeQueue._dispatch_pod_guarded)
+    ref = jax.eval_shape(net.init, jax.random.PRNGKey(0))
     _, treedef = jax.tree.flatten(ref)
     params = jax.tree.unflatten(treedef, flat)
     return net, params, spec

@@ -363,6 +363,21 @@ class ShadowScorer:
             t.join(timeout=5.0)
         self._thread = None
 
+    def close(self, drain: bool = True, *, timeout: float = 30.0) -> None:
+        """Orderly shutdown (``ServeQueue.close`` calls this last).
+
+        Disables sampling so no new replays enqueue, optionally drains
+        the backlog (``drain=True`` waits up to ``timeout``), then stops
+        the worker — interpreter teardown can no longer race a
+        mid-replay scorer.  The worker restarts lazily if the scorer is
+        re-enabled and submitted to afterwards (tests reuse the
+        singleton), so close is safe to call more than once.
+        """
+        self.disable()
+        if drain:
+            self.flush(timeout)
+        self.stop()
+
     def state(self, key: str) -> str:
         with self._lock:
             st = self._keys.get(key)

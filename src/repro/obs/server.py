@@ -129,6 +129,16 @@ class ObsServer:
                 ok = False
             queues[name] = ok
         dead = [f"queue:{n}" for n, ok in queues.items() if not ok]
+        pod: dict = {}
+        try:
+            # lazy: multihost stays jax-free and obs must not force it in
+            from repro.launch.multihost import POD_HEALTH
+            pod = POD_HEALTH.snapshot()
+        except Exception:
+            pod = {}
+        if pod.get("degraded"):
+            dead += ([f"pod:host-{k}" for k in pod.get("offenders") or ()]
+                     or ["pod:degraded"])
         ready = not critical and not dead
         return ready, {
             "status": "ok" if ready else "unhealthy",
@@ -136,6 +146,7 @@ class ObsServer:
             "queues": queues,
             "quality": quality,
             "slo": slo,
+            "pod": pod,
         }
 
     def varz(self) -> dict:

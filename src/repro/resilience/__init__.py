@@ -1,0 +1,29 @@
+"""repro.resilience — fault tolerance for the serving stack.
+
+Three pieces, layered under `repro.serve` and `repro.core.region`:
+
+- :mod:`repro.resilience.faults` — deterministic, seedable fault
+  injection (`REPRO_FAULTS`) at fixed serve-path sites, used by tests,
+  benches, and the chaos CI lane.
+- :mod:`repro.resilience.retry` — capped exponential backoff policy for
+  transient dispatch failures.
+- :mod:`repro.resilience.breaker` — per-bundle CLOSED→OPEN→HALF_OPEN
+  circuit breakers that route `MLRegion` traffic to the accurate path
+  while the surrogate is failing or drifted.
+
+Import order matters: this package imports only `repro.obs`; the serve
+and region layers import us.
+"""
+from repro.resilience.faults import (  # noqa: F401
+    FAULTS, FaultInjector, FaultRule, InjectedFault, parse_plan)
+from repro.resilience.retry import DEFAULT_RETRY, RetryPolicy  # noqa: F401
+from repro.resilience.breaker import (  # noqa: F401
+    BREAKERS, BreakerBoard, BreakerPolicy, CircuitBreaker,
+    CLOSED, OPEN, HALF_OPEN)
+
+__all__ = [
+    "FAULTS", "FaultInjector", "FaultRule", "InjectedFault", "parse_plan",
+    "DEFAULT_RETRY", "RetryPolicy",
+    "BREAKERS", "BreakerBoard", "BreakerPolicy", "CircuitBreaker",
+    "CLOSED", "OPEN", "HALF_OPEN",
+]

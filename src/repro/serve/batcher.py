@@ -24,12 +24,40 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.obs import TRACER
+from repro.obs import metrics as _metrics
+from repro.resilience.breaker import BREAKERS
+from repro.resilience.faults import FAULTS
+from repro.resilience.retry import DEFAULT_RETRY, RetryPolicy
 from repro.serve.scratch import ScratchPool
 from repro.serve.stats import ServeStats
 
 # process-wide dispatch sequence: ties a request's spans to the batch
 # that served it in a trace without threading ids through call sites
 _BATCH_IDS = itertools.count()
+
+_RETRIES = _metrics.counter(
+    "repro_resilience_retries_total",
+    "dispatch attempts retried after a transient failure", ("key",))
+_SPLITS = _metrics.counter(
+    "repro_resilience_split_retries_total",
+    "batches bisected to isolate a poisoned request", ("key",))
+_NONFINITE = _metrics.counter(
+    "repro_resilience_nonfinite_total",
+    "output rows screened as NaN/Inf before scatter", ("key",))
+
+
+class NonFiniteOutput(RuntimeError):
+    """A request's output rows contained NaN/Inf and were withheld.
+
+    Screened before scatter: non-finite surrogate output is a failure
+    (the caller falls back to the accurate path via its future's
+    exception), never a silently returned value.
+    """
+
+    def __init__(self, key: str, rows: int):
+        super().__init__(f"non-finite surrogate output for {key!r} "
+                         f"({rows} rows withheld)")
+        self.key, self.rows = key, rows
 
 
 def bucket_size(n: int, min_bucket: int = 8) -> int:
@@ -67,9 +95,11 @@ class Batcher:
 
     def __init__(self, *, min_bucket: int = 8,
                  engine_for: Optional[Callable] = None,
-                 scratch: Optional[ScratchPool] = None):
+                 scratch: Optional[ScratchPool] = None,
+                 retry: Optional[RetryPolicy] = None):
         self.min_bucket = min_bucket
         self.scratch = scratch or ScratchPool()
+        self.retry = retry or DEFAULT_RETRY
         if engine_for is None:
             def engine_for(key):
                 from repro.core.engine import InferenceEngine
@@ -188,9 +218,56 @@ class Batcher:
             return use_mesh(None)
         return use_mesh(ctx.mesh, ctx.multi_pod)
 
+    @staticmethod
+    def _fail_all(requests, exc, stats, reason, busy_s, *,
+                  record_breaker_key=None):
+        for r in requests:
+            r.future.set_exception(exc)
+        stats.on_failure(requests=len(requests),
+                         rows=sum(r.n for r in requests), reason=reason,
+                         busy_s=busy_s)
+        if record_breaker_key is not None:
+            BREAKERS.record_failure(record_breaker_key)
+
+    @staticmethod
+    def _screen_nonfinite(requests, Y) -> tuple:
+        """Indices of requests whose output rows contain NaN/Inf.
+
+        Cheap whole-batch check first; the per-request scan only runs
+        when the batch is known dirty, so the healthy path pays one
+        vectorized ``isfinite`` reduce over host memory.
+        """
+        if not np.issubdtype(Y.dtype, np.inexact) \
+                or bool(np.isfinite(Y).all()):
+            return ()
+        bad, off = [], 0
+        for i, r in enumerate(requests):
+            if not np.isfinite(Y[off:off + r.n]).all():
+                bad.append(i)
+            off += r.n
+        return tuple(bad)
+
     def dispatch(self, key: str, requests: List, stats: ServeStats,
-                 reason: str) -> None:
-        """Serve one coalesced batch and resolve every request future."""
+                 reason: str, *, _attempts: Optional[int] = None) -> None:
+        """Serve one coalesced batch and resolve every request future.
+
+        Failure handling, in order:
+
+        1. Engine *load* failures (missing/corrupt bundle) are
+           deterministic — fail the whole batch once, no retry, no split.
+        2. Compute/landing failures retry up to ``retry.max_attempts``
+           with capped exponential backoff (the mega-batch is re-gathered
+           each attempt — a donated buffer is dead after a failed apply).
+        3. A multi-request batch that exhausts its retries is bisected
+           (split-retry): each half re-dispatches with a single attempt,
+           recursing down to singles, so one poisoned request cannot fail
+           its siblings — only the request that actually fails does.
+        4. Non-finite output rows are screened before scatter and
+           converted to per-request :class:`NonFiniteOutput` failures,
+           never silently returned.
+
+        Every outcome feeds the per-key circuit breaker.
+        """
         if not requests:
             return
         # monotonic throughout: latencies subtract submit-time stamps
@@ -200,42 +277,83 @@ class Batcher:
         traced = tr.enabled
         bid = next(_BATCH_IDS)
         try:
-            n = sum(r.n for r in requests)
-            ctx = requests[0].ctx
-            shards = (ctx.axis_size("data")
-                      if ctx is not None and ctx.mesh is not None else 1)
-            bucket = bucket_for(n, self.min_bucket, shards)
-            with tr.span("batch.gather", cat="batch",
-                         args={"key": key, "batch": bid, "rows": n,
-                               "bucket": bucket, "requests": len(requests)}):
-                X, owned = self._gather(requests, n, bucket)
             eng = self._engine_for(key)
-            with tr.span("batch.apply", cat="batch",
-                         args={"key": key, "batch": bid, "bucket": bucket,
-                               "reason": reason}):
-                with self._request_ctx(requests):
-                    Y = eng.apply_batched(X, min_bucket=self.min_bucket,
-                                          donate=owned, prepadded=owned)
-                Y = jax.block_until_ready(Y)
-            # one device->host gather for the whole mega-batch: scattering
-            # zero-copy numpy row views is ~1000x cheaper than slicing a
-            # mesh-sharded array once per caller (each such slice is a
-            # cross-device gather of its own)
-            with tr.span("batch.to_host", cat="batch",
-                         args={"key": key, "batch": bid}):
-                Y = self._to_host(Y)
-        except Exception as e:  # engine/load failure fails the whole batch
+        except Exception as e:
+            # bundle-load failures are batch-independent: retrying or
+            # splitting would re-fail identically request by request
             tr.instant("batch.error", cat="batch",
                        args={"key": key, "batch": bid, "error": repr(e)})
-            for r in requests:
-                r.future.set_exception(e)
-            stats.on_failure(requests=len(requests),
-                             rows=sum(r.n for r in requests), reason=reason,
-                             busy_s=time.monotonic() - t0)
+            self._fail_all(requests, e, stats, reason,
+                           time.monotonic() - t0, record_breaker_key=key)
             return
+        n = sum(r.n for r in requests)
+        ctx = requests[0].ctx
+        shards = (ctx.axis_size("data")
+                  if ctx is not None and ctx.mesh is not None else 1)
+        bucket = bucket_for(n, self.min_bucket, shards)
+        attempts = self.retry.max_attempts if _attempts is None \
+            else max(1, _attempts)
+        Y = None
+        last_exc: Optional[Exception] = None
+        for attempt in range(attempts):
+            try:
+                with tr.span("batch.gather", cat="batch",
+                             args={"key": key, "batch": bid, "rows": n,
+                                   "bucket": bucket,
+                                   "requests": len(requests)}):
+                    X, owned = self._gather(requests, n, bucket)
+                with tr.span("batch.apply", cat="batch",
+                             args={"key": key, "batch": bid,
+                                   "bucket": bucket, "reason": reason,
+                                   "attempt": attempt}):
+                    with self._request_ctx(requests):
+                        Y = eng.apply_batched(X, min_bucket=self.min_bucket,
+                                              donate=owned, prepadded=owned)
+                    Y = jax.block_until_ready(Y)
+                # one device->host gather for the whole mega-batch:
+                # scattering zero-copy numpy row views is ~1000x cheaper
+                # than slicing a mesh-sharded array once per caller (each
+                # such slice is a cross-device gather of its own)
+                with tr.span("batch.to_host", cat="batch",
+                             args={"key": key, "batch": bid}):
+                    Y = self._to_host(Y)
+                break
+            except Exception as e:
+                Y, last_exc = None, e
+                tr.instant("batch.error", cat="batch",
+                           args={"key": key, "batch": bid,
+                                 "attempt": attempt, "error": repr(e)})
+                if attempt + 1 < attempts:
+                    _RETRIES.inc(1, key=key)
+                    time.sleep(self.retry.delay_for(attempt))
+        if Y is None:
+            if len(requests) > 1:
+                # split-retry: bisect so a poisoned request fails alone;
+                # children get one attempt each (the backoff budget was
+                # already spent above) and recurse down to singles
+                _SPLITS.inc(1, key=key)
+                tr.instant("batch.split", cat="batch",
+                           args={"key": key, "batch": bid,
+                                 "requests": len(requests)})
+                mid = len(requests) // 2
+                self.dispatch(key, requests[:mid], stats, reason,
+                              _attempts=1)
+                self.dispatch(key, requests[mid:], stats, reason,
+                              _attempts=1)
+                return
+            self._fail_all(requests, last_exc, stats, reason,
+                           time.monotonic() - t0, record_breaker_key=key)
+            return
+        if FAULTS.enabled:
+            rule = FAULTS.fire("batcher.scatter", key=key)
+            if rule is not None and rule.mode in ("nan", "inf"):
+                Y = np.array(Y)  # writable copy on the injected path only
+                Y[:requests[0].n] = rule.value
+        bad = self._screen_nonfinite(requests, Y)
         t1 = time.monotonic()
         off = 0
         lats = []
+        bad_rows = 0
         # per-request span [enqueue, future resolved]: with queue.submit
         # it tiles the request's whole enqueue->resolve window, so
         # coverage audits close; queued time is recoverable inside it as
@@ -243,7 +361,12 @@ class Batcher:
         # request of the batch (rec() documents shared-args safety).
         rargs = {"key": key, "batch": bid, "reason": reason} if traced \
             else None
-        for r in requests:
+        for i, r in enumerate(requests):
+            if i in bad:
+                r.future.set_exception(NonFiniteOutput(key, r.n))
+                bad_rows += r.n
+                off += r.n
+                continue
             r.future.set_result(Y[off:off + r.n])
             off += r.n
             lats.append(t1 - r.t_enqueue)
@@ -254,8 +377,20 @@ class Batcher:
             tr.record("batch.scatter", t1, time.monotonic(), cat="batch",
                       args={"key": key, "batch": bid,
                             "requests": len(requests)})
-        stats.on_batch(requests=len(requests), rows=n, bucket=bucket,
-                       reason=reason, busy_s=t1 - t0, latencies_s=lats)
+        if bad:
+            _NONFINITE.inc(bad_rows, key=key)
+            tr.instant("batch.nonfinite", cat="batch",
+                       args={"key": key, "batch": bid,
+                             "requests": len(bad), "rows": bad_rows})
+            stats.on_failure(requests=len(bad), rows=bad_rows,
+                             reason=reason, busy_s=0.0)
+            BREAKERS.record_failure(key)
+        else:
+            BREAKERS.record_success(key)
+        if len(bad) < len(requests):
+            stats.on_batch(requests=len(requests) - len(bad),
+                           rows=n - bad_rows, bucket=bucket, reason=reason,
+                           busy_s=t1 - t0, latencies_s=lats)
 
     @staticmethod
     def _dtype_from_num(num: int):
@@ -389,6 +524,7 @@ class Batcher:
                 r.future.set_exception(e)
             stats.on_failure(requests=len(requests), rows=local_n,
                              reason=reason, busy_s=time.monotonic() - t0)
+            BREAKERS.record_failure(key)
             if nproc > 1:
                 # pod-fatal: a host that bails after the count all-gather
                 # (bundle read failure, bad dtype, ...) has already
@@ -398,18 +534,34 @@ class Batcher:
                 # tears the pod down.
                 raise
             return
+        bad = self._screen_nonfinite(requests, Yh) if requests else ()
         t1 = time.monotonic()
         off = 0
         lats = []
+        bad_rows = 0
         rargs = {"key": key, "batch": bid, "reason": reason,
                  "pid": pid, "nproc": nproc} if traced else None
-        for r in requests:
+        for i, r in enumerate(requests):
+            if i in bad:
+                r.future.set_exception(NonFiniteOutput(key, r.n))
+                bad_rows += r.n
+                off += r.n
+                continue
             r.future.set_result(Yh[off:off + r.n])
             off += r.n
             lats.append(t1 - r.t_enqueue)
             if traced:
                 tr.rec("serve.request", "serve", r.t_enqueue,
                        time.monotonic(), r.trace, rargs)
-        stats.on_batch(requests=len(requests), rows=local_n, bucket=bucket,
-                       reason=reason, busy_s=t1 - t0, latencies_s=lats,
-                       remote_rows=total - local_n)
+        if bad:
+            _NONFINITE.inc(bad_rows, key=key)
+            stats.on_failure(requests=len(bad), rows=bad_rows,
+                             reason=reason, busy_s=0.0)
+            BREAKERS.record_failure(key)
+        else:
+            BREAKERS.record_success(key)
+        if not requests or len(bad) < len(requests):
+            stats.on_batch(requests=len(requests) - len(bad),
+                           rows=local_n - bad_rows, bucket=bucket,
+                           reason=reason, busy_s=t1 - t0, latencies_s=lats,
+                           remote_rows=total - local_n)

@@ -57,12 +57,20 @@ class FlushPolicy:
 
 
 class ServeFuture:
-    """Resolves to the engine-output rows ``[n, ...]`` for one request."""
+    """Resolves to the engine-output rows ``[n, ...]`` for one request.
 
-    __slots__ = ("_event", "_value", "_exc", "_queue", "_key", "trace")
+    Resolution is first-wins: once set, later ``set_result`` /
+    ``set_exception`` calls are dropped.  The pod watchdog relies on
+    this — a zombie collective thread that finishes after the watchdog
+    already re-dispatched locally cannot overwrite the delivered rows.
+    """
+
+    __slots__ = ("_event", "_value", "_exc", "_queue", "_key", "_lock",
+                 "trace")
 
     def __init__(self, queue: "ServeQueue", key: str):
         self._event = threading.Event()
+        self._lock = threading.Lock()
         self._value = None
         self._exc: Optional[BaseException] = None
         self._queue = queue
@@ -72,13 +80,21 @@ class ServeFuture:
     def done(self) -> bool:
         return self._event.is_set()
 
-    def set_result(self, value) -> None:
-        self._value = value
-        self._event.set()
+    def set_result(self, value) -> bool:
+        with self._lock:
+            if self._event.is_set():
+                return False
+            self._value = value
+            self._event.set()
+            return True
 
-    def set_exception(self, exc: BaseException) -> None:
-        self._exc = exc
-        self._event.set()
+    def set_exception(self, exc: BaseException) -> bool:
+        with self._lock:
+            if self._event.is_set():
+                return False
+            self._exc = exc
+            self._event.set()
+            return True
 
     def result(self, timeout: Optional[float] = None):
         if not self._event.is_set():
@@ -105,6 +121,44 @@ class _Request:
         self.trace = trace  # obs trace id, minted at submit, rides along
 
 
+class _StatsGate:
+    """Revocable forwarding proxy for :class:`ServeStats`.
+
+    The pod watchdog hands the collective dispatch this gate instead of
+    the real stats object; on timeout it calls :meth:`kill` before
+    re-dispatching locally, so the zombie collective thread — should it
+    ever finish — cannot double-account the batch it lost.  ``kill()``
+    returns False when the dispatch already delivered through the gate,
+    in which case the watchdog treats the round as completed instead.
+    """
+
+    def __init__(self, stats):
+        self._stats = stats
+        self._lock = threading.Lock()
+        self._dead = False
+        self._consumed = False
+
+    def on_batch(self, **kw) -> None:
+        with self._lock:
+            if self._dead:
+                return
+            self._consumed = True
+        self._stats.on_batch(**kw)
+
+    def on_failure(self, **kw) -> None:
+        with self._lock:
+            if self._dead:
+                return
+            self._consumed = True
+        self._stats.on_failure(**kw)
+
+    def kill(self) -> bool:
+        """Revoke the gate; True when nothing was delivered through it."""
+        with self._lock:
+            self._dead = True
+            return not self._consumed
+
+
 class ServeQueue:
     def __init__(self, policy: FlushPolicy = FlushPolicy(), *,
                  batcher: Optional[Batcher] = None, controller=None,
@@ -119,6 +173,8 @@ class ServeQueue:
         self._stats: Dict[str, ServeStats] = {}
         self._thread: Optional[threading.Thread] = None
         self._stopping = False
+        self._crashed: Optional[BaseException] = None
+        self._closed = False
 
     # ------------------------------------------------- adaptive policy ---
     # An attached controller overrides the static deadline and max-batch
@@ -181,6 +237,8 @@ class ServeQueue:
                 "mode": "threaded" if t is not None else "thread-free",
                 "dispatcher_alive": bool(t is not None and t.is_alive()),
                 "stopping": self._stopping,
+                "closed": self._closed,
+                "crashed": repr(self._crashed) if self._crashed else None,
                 "pending_rows": self._rows_total,
                 "pending_keys": len(self._pending),
             }
@@ -190,6 +248,8 @@ class ServeQueue:
         would queue forever).  Thread-free queues are always healthy —
         callers make their own progress."""
         with self._cv:
+            if self._crashed is not None:
+                return False
             t = self._thread
             return t is None or (t.is_alive() and not self._stopping)
 
@@ -217,6 +277,7 @@ class ServeQueue:
         while True:
             admitted, drain_inline, flush_inline = False, False, False
             with self._cv:
+                self._check_open_locked()
                 pend = self._pending.get(key)
                 if pend and pend[0].x.shape[1:] != x.shape[1:]:
                     raise ValueError(
@@ -276,6 +337,14 @@ class ServeQueue:
             return True
         return self._rows_total + n <= self.policy.max_pending_rows
 
+    def _check_open_locked(self) -> None:
+        if self._closed:
+            raise RuntimeError("submit on a closed ServeQueue")
+        if self._crashed is not None:
+            raise RuntimeError(
+                f"serve dispatcher thread died: {self._crashed!r}"
+            ) from self._crashed
+
     # ------------------------------------------------------------ flush ---
     def flush(self, key: Optional[str] = None, *,
               reason: str = "explicit") -> int:
@@ -317,7 +386,24 @@ class ServeQueue:
         ``ctx`` pins the serving ShardCtx for hosts with no pending
         requests (otherwise the first request's submit-time ctx governs,
         as in ordinary dispatch).
+
+        Dropout tolerance (multi-process only): each flush round writes
+        a heartbeat through the coordinator KV store and runs the
+        collective under a watchdog (``REPRO_POD_WATCHDOG_S``).  If the
+        collective stalls past the timeout — a peer dropped or hung —
+        the survivors mark the pod degraded (healthz names the offending
+        ``pod:host-<k>``), abandon the collective to a zombie daemon
+        thread, and re-dispatch their local rows through the ordinary
+        single-host path, so no request is lost and no host deadlocks.
+        The degrade *decision* lands within the watchdog; the re-dispatched
+        batch itself may still execute only once the torn collective
+        releases the devices (backends with FIFO per-device streams, e.g.
+        XLA CPU, pin them until the transport's own peer timeout) — drain
+        is transport-bound, loss-freedom is not.  While degraded, flushes
+        stay local-only until ``POD_HEALTH.try_rejoin`` clears.
         """
+        from repro.launch import multihost
+        from repro.resilience.faults import FAULTS
         with self._cv:
             if self._thread is not None:
                 raise RuntimeError(
@@ -325,6 +411,11 @@ class ServeQueue:
                     "collective and must run from the driver loop, not a "
                     "per-host dispatcher thread (use a thread-free queue)")
             keys = [key] if key is not None else sorted(self._pending)
+        if FAULTS.enabled:
+            # fires before the heartbeat on purpose: a dropped host must
+            # look dropped — it never writes this round's beat
+            FAULTS.fire("pod.flush", key=key)
+        multi = multihost.is_multiprocess()
         dispatched = 0
         for k in keys:
             with self._cv:
@@ -334,12 +425,73 @@ class ServeQueue:
                 st = self._stat_locked(k)
                 if rows:
                     self._cv.notify_all()  # wake backpressured submitters
-            # always dispatch — a zero-row host still owes the pod its
-            # collectives (dispatch_pod returns early only when *every*
-            # host is empty)
-            self._batcher.dispatch_pod(k, reqs, st, ctx=ctx)
+            if not multi:
+                # single process: the collective is trivially local and
+                # cannot stall on a peer — no watchdog overhead
+                self._batcher.dispatch_pod(k, reqs, st, ctx=ctx)
+            elif multihost.POD_HEALTH.degraded:
+                # survivors serve local-only: entering a collective with
+                # a dead peer would hang again
+                if reqs:
+                    self._dispatch_local_degraded(k, reqs, st)
+            else:
+                # always dispatch — a zero-row host still owes the pod
+                # its collectives (dispatch_pod returns early only when
+                # *every* host is empty)
+                self._dispatch_pod_guarded(k, reqs, st, ctx)
             dispatched += rows
         return dispatched
+
+    def _dispatch_pod_guarded(self, k: str, reqs: List, st, ctx) -> None:
+        """Run one collective dispatch under the pod watchdog."""
+        from repro.launch import multihost
+        health = multihost.POD_HEALTH
+        round_id = health.beat()
+        gate = _StatsGate(st)
+        box: Dict[str, BaseException] = {}
+        done = threading.Event()
+
+        def run():
+            try:
+                self._batcher.dispatch_pod(k, reqs, gate, ctx=ctx)
+            except BaseException as e:
+                box["exc"] = e
+            finally:
+                done.set()
+
+        t = threading.Thread(target=run, daemon=True,
+                             name="repro-pod-dispatch")
+        t.start()
+        if done.wait(timeout=multihost.pod_watchdog_s()):
+            exc = box.get("exc")
+            if exc is not None:
+                raise exc  # pod-fatal contract preserved
+            return
+        # watchdog fired.  kill() returning False means the collective
+        # delivered in the race window between timeout and now — take it.
+        if not gate.kill():
+            return
+        offenders = health.check_round(round_id)
+        health.mark_degraded(offenders)
+        TRACER.instant("pod.watchdog", cat="pod",
+                       args={"key": k, "round": round_id,
+                             "offenders": list(offenders)})
+        if reqs:
+            # zero-lost: the abandoned collective can no longer win —
+            # first-wins futures drop anything the zombie produces late
+            self._dispatch_local_degraded(k, reqs, st)
+
+    def _dispatch_local_degraded(self, k: str, reqs: List, st) -> None:
+        """Serve pod-submitted requests through the single-host path.
+
+        Their submit-time ShardCtx names the (now torn) pod mesh, whose
+        remote devices a local dispatch cannot place onto — strip it so
+        the batch serves meshless-eager; row-wise surrogates make the
+        results bit-identical either way.
+        """
+        for r in reqs:
+            r.ctx = None
+        self._batcher.dispatch(k, reqs, st, reason="pod_degraded")
 
     def poll(self) -> int:
         """Flush keys whose max-batch/deadline triggers fired (no thread).
@@ -391,16 +543,76 @@ class ServeQueue:
             self.flush(reason="drain")
 
     def _run(self) -> None:
-        while True:
+        try:
+            while True:
+                with self._cv:
+                    if self._stopping:
+                        return
+                    due = self._due_locked()
+                    if not due:
+                        self._cv.wait(timeout=self._nearest_deadline())
+                        continue
+                for k, why in due:
+                    self.flush(k, reason=why)
+        except BaseException as e:
+            # a dying dispatcher must not leave submitters hanging to
+            # block_timeout_s: fail every pending future now, mark the
+            # queue crashed (healthz flips, new submits refuse), then
+            # re-raise so the crash traceback still reaches stderr
+            self._on_dispatcher_crash(e)
+            raise
+
+    def _on_dispatcher_crash(self, exc: BaseException) -> None:
+        with self._cv:
+            self._crashed = exc
+            pending, self._pending = self._pending, {}
+            self._rows_total = 0
+            stats = {k: self._stat_locked(k) for k in pending}
+            self._cv.notify_all()  # unblock backpressured submitters
+        err = RuntimeError(f"serve dispatcher thread died: {exc!r}")
+        err.__cause__ = exc
+        TRACER.instant("queue.crash", cat="queue",
+                       args={"error": repr(exc)})
+        for k, reqs in pending.items():
+            for r in reqs:
+                r.future.set_exception(err)
+            stats[k].on_failure(requests=len(reqs),
+                                rows=sum(r.n for r in reqs),
+                                reason="dispatcher_crash", busy_s=0.0)
+
+    # ------------------------------------------------------------ close ---
+    def close(self, drain: bool = True, *, timeout: float = 30.0) -> None:
+        """Orderly shutdown for interpreter teardown / atexit.
+
+        Refuses new submits from this point on, stops the dispatcher
+        thread, drains (``drain=True``) or fails (``drain=False``) the
+        remaining pending batches, and then stops the shadow-scorer
+        worker — in that order, so teardown can never race a mid-replay
+        scorer against a dying queue.  Idempotent.
+        """
+        with self._cv:
+            if self._closed:
+                return
+            self._closed = True
+        if self._thread is not None:
+            self.stop(drain=drain)
+        elif drain:
+            self.flush(reason="close")
+        if not drain:
             with self._cv:
-                if self._stopping:
-                    return
-                due = self._due_locked()
-                if not due:
-                    self._cv.wait(timeout=self._nearest_deadline())
-                    continue
-            for k, why in due:
-                self.flush(k, reason=why)
+                pending, self._pending = self._pending, {}
+                self._rows_total = 0
+                stats = {k: self._stat_locked(k) for k in pending}
+                self._cv.notify_all()
+            err = RuntimeError("ServeQueue closed before dispatch")
+            for k, reqs in pending.items():
+                for r in reqs:
+                    r.future.set_exception(err)
+                stats[k].on_failure(requests=len(reqs),
+                                    rows=sum(r.n for r in reqs),
+                                    reason="close", busy_s=0.0)
+        from repro.obs.quality import SHADOW
+        SHADOW.close(drain=drain, timeout=timeout)
 
     def _due_locked(self):
         now = time.monotonic()
