@@ -47,7 +47,13 @@ SHADOW_RATE = float(os.environ.get("REPRO_SHADOW_RATE", "") or 0.05)
 #: injected weight corruption must flip the drift alert to CRITICAL
 #: within this many shadow samples
 SHADOW_ALERT_SAMPLES = 20
-SHADOW_RMSE_BUDGET = 0.05
+#: drift-alert budget for the corruption drill.  Registered in the
+#: shared per-bundle registry (``repro.quant.budgets``) rather than set
+#: directly on the scorer: the check exercises the same resolution path
+#: the quant gate certifies int8 eligibility through, so this bench
+#: fails if the two accuracy gates ever stop reading the same numbers.
+SHADOW_RMSE_BUDGET = float(
+    os.environ.get("REPRO_SHADOW_RMSE_BUDGET", "") or 0.05)
 #: resilience gate: the breaker board enabled (idle, CLOSED) must keep
 #: >= this fraction of the board-disabled rows/s on the coalesced path
 FAULT_IDLE_MIN_RATIO = 0.98
@@ -466,7 +472,10 @@ def shadow_alert_check():
 
     was_shadow, prev_rate = SHADOW.enabled, SHADOW.rate
     SHADOW.enable(rate=1.0)
-    SHADOW.set_budget(mp, SHADOW_RMSE_BUDGET)
+    # through the shared registry, NOT SHADOW.set_budget: the scorer's
+    # fallback chain (explicit > quant.budgets > default) must resolve it
+    from repro.quant.budgets import set_rmse_budget
+    set_rmse_budget(mp, SHADOW_RMSE_BUDGET)
     MONITOR.track(mp, queue.stats(mp),
                   SLO(latency_threshold_s=5.0, windows_s=(30.0, 120.0),
                       min_events=1))

@@ -48,6 +48,23 @@ from repro.nn.serialize import load_model
 from repro.obs import TRACER
 
 
+def bundle_norm(spec, net):
+    """The bundle's (x_mu, x_sd, y_mu, y_sd) normalization arrays, or
+    None when it was trained unnormalized.  Shared with the quant gate
+    (:mod:`repro.quant.gate`), which must compare f32 and int8-simulated
+    outputs in the same physical units the per-bundle RMSE budgets are
+    written in."""
+    extra = spec.get("extra") or {}
+    if "x_mu" not in extra:
+        return None
+    import numpy as np
+    ish = tuple(spec["in_shape"][1:])
+    osh = tuple(net.out_shape()[1:])
+    return tuple(jnp.asarray(np.asarray(extra[k], np.float32).reshape(s))
+                 for k, s in (("x_mu", ish), ("x_sd", ish),
+                              ("y_mu", osh), ("y_sd", osh)))
+
+
 def _bundle_mtime(path: str) -> tuple:
     """(mtime_ns, size) fingerprint of the bundle files.
 
@@ -91,6 +108,65 @@ class InferenceEngine:
         self._applies.clear()
         self._shardings.clear()
         self._seen_shapes.clear()
+        # precision tier is a load-time property: the gate verdict is
+        # bound to the bundle fingerprint, so any reload re-resolves it
+        # (gate_bundle() invalidates the engine cache after a verdict)
+        self._qlayers = None
+        self._qacts = None
+        self.tier = self._resolve_tier()
+        if self.tier == "int8":
+            self._quantize_residency()
+
+    def _resolve_tier(self) -> str:
+        """Which precision tier this engine serves (resolved once per
+        load — the serve path must not re-read env vars or gate files
+        per batch).
+
+        ``REPRO_QUANT`` modes: ``auto`` (default) serves int8 only on
+        TPU — off-TPU the int8-simulating oracle is *slower* than the
+        f32 path, so quantization buys nothing; ``force``/``1`` serves
+        int8 on any backend (CI drills the full quantized path in
+        interpret/oracle mode); ``never``/``0`` pins f32.  In every mode
+        except ``never`` the bundle must have **passed its accuracy
+        gate** — a gate-fail (or stale/absent) verdict serves f32 even
+        under ``force``; that is the fail-safe the gate exists for.
+        """
+        mode = os.environ.get("REPRO_QUANT", "auto").strip().lower()
+        if mode in ("never", "0", "off"):
+            return "f32"
+        if self.use_kernel == "never" or not self._is_pure_mlp():
+            return "f32"
+        if mode not in ("force", "1") and jax.default_backend() != "tpu":
+            return "f32"
+        try:
+            from repro.quant.gate import gate_passed
+            if not gate_passed(self.path):
+                return "f32"
+        except Exception:
+            return "f32"
+        return "int8"
+
+    def _quantize_residency(self):
+        """Quantize the dense stack once at load (per-output-channel
+        int8 weights + f32 scales), using the exact ``scale_mult`` the
+        gate verdict blessed — serving must run the same numbers the
+        gate measured, not a fresh calibration."""
+        from repro.kernels.fused_mlp.ops import mlp_stack_from_spec
+        from repro.quant.gate import verdict
+        from repro.quant.quantize import quantize_params
+        rec = verdict(self.path) or {}
+        sm = float(rec.get("scale_mult", 1.0))
+        with jax.ensure_compile_time_eval():
+            _, weights, biases, acts = mlp_stack_from_spec(
+                self.spec, self.params, jnp.zeros((1, 1), jnp.float32))
+            self._qlayers = tuple(
+                tuple(q) for q in quantize_params(weights, biases,
+                                                  scale_mult=sm))
+        self._qacts = tuple(acts)
+        from repro.obs import metrics as _m
+        _m.counter("repro_quant_eligible_total",
+                   "bundle loads that resolved to the int8 tier",
+                   ("bundle",)).inc(1, bundle=self.path)
 
     @classmethod
     def get(cls, model_path) -> "InferenceEngine":
@@ -128,25 +204,28 @@ class InferenceEngine:
 
     def _build(self, ctx=None, donate: bool = False):
         net = self.net
-        extra = self.spec.get("extra") or {}
-        norm = None
-        if "x_mu" in extra:
-            import numpy as np
-            ish = tuple(self.spec["in_shape"][1:])
-            osh = tuple(net.out_shape()[1:])
-            norm = tuple(jnp.asarray(np.asarray(extra[k], np.float32)
-                                     .reshape(s))
-                         for k, s in (("x_mu", ish), ("x_sd", ish),
-                                      ("y_mu", osh), ("y_sd", osh)))
+        norm = bundle_norm(self.spec, net)
+        mesh = ctx.mesh if ctx is not None else None
+        data_axes = (ctx.mesh_axes_for("data") if ctx is not None else ())
 
-        if self.use_kernel != "never" and self._is_pure_mlp() and \
+        if self.tier == "int8" and self._qlayers is not None:
+            # gated quantized tier: serve the load-time int8 residency.
+            # On TPU this dispatches the fused_mlp_int8 Pallas kernel;
+            # off-TPU (REPRO_QUANT=force drills) the registry routes the
+            # same call to the int8-simulating jnp oracle, so the served
+            # numbers are the gated numbers on every backend.
+            from repro.kernels.fused_mlp import int8 as qops
+            qlayers = self._qlayers
+
+            def raw(params, x):
+                return qops.fused_mlp_int8_from_spec(
+                    self.spec, list(qlayers), x, mesh=mesh,
+                    data_axes=data_axes)
+        elif self.use_kernel != "never" and self._is_pure_mlp() and \
                 jax.default_backend() == "tpu":
             from repro.kernels.fused_mlp import ops as fused_ops
             # under a multi-shard data axis the kernel runs per shard via
             # shard_map, keeping the VMEM-resident fast path under GSPMD
-            mesh = ctx.mesh if ctx is not None else None
-            data_axes = (ctx.mesh_axes_for("data") if ctx is not None
-                         else ())
 
             def raw(params, x):
                 return fused_ops.fused_mlp_from_spec(
@@ -268,12 +347,18 @@ class InferenceEngine:
                         lambda p: p + fault.scale, self.params)
         fn = self._apply_for(ctx, donate=donate)
         x = self._place(x, ctx)
+        if self.tier == "int8" and not isinstance(x, jax.core.Tracer):
+            from repro.obs import metrics as _m
+            _m.counter("repro_quant_served_rows_total",
+                       "rows served by the gated int8 tier",
+                       ("bundle",)).inc(n, bundle=self.path)
         if TRACER.enabled and not isinstance(x, jax.core.Tracer):
             shape_key = (id(fn), tuple(x.shape))
             first = shape_key not in self._seen_shapes
             with TRACER.span("engine.apply", cat="engine",
                              args={"path": self.path, "rows": n,
                                    "bucket": int(x.shape[0]),
+                                   "tier": self.tier,
                                    "donate": donate, "compile": first}):
                 y = fn(self.params, x)
             self._seen_shapes.add(shape_key)

@@ -65,19 +65,26 @@ def _key(problem, backend):
 
 def _fits(problem, params, budget=None):
     """One grid step holds a q block, the kv head's full (padded) K/V,
-    the score block, and the running (acc, m, l) — all f32 compute."""
+    the score block, and the running (acc, m, l).
+
+    Streamed operands (q, K, V, out) are priced at the problem's own
+    dtype width — a bf16 cache packs twice the K/V rows of an f32 one —
+    while the softmax scratch (scores, acc, m, l) is always computed and
+    held in f32, whatever the input dtype.
+    """
     if budget is None:
         budget = registry.device_vmem_budget()
     bq, bk = params["block_q"], params["block_kv"]
     hd = problem["hd"]
+    db = np.dtype(problem["dtype"]).itemsize
     skv_p = registry.round_up(problem["skv"], bk)
     t = registry.tile_bytes
-    resident = (2 * t(bq, hd)            # q block, double-buffered
-                + 2 * 2 * t(skv_p, hd)   # K and V, double-buffered
-                + t(bq, bk)              # score block
-                + t(bq, hd)              # acc
-                + 2 * t(bq, 1)           # m, l (lane-padded)
-                + 2 * t(bq, hd))         # out block, double-buffered
+    resident = (2 * t(bq, hd, db)            # q block, double-buffered
+                + 2 * 2 * t(skv_p, hd, db)   # K and V, double-buffered
+                + t(bq, bk, 4)               # f32 score block
+                + t(bq, hd, 4)               # f32 acc
+                + 2 * t(bq, 1, 4)            # m, l (lane-padded)
+                + 2 * t(bq, hd, db))         # out block, double-buffered
     return resident <= budget
 
 

@@ -69,31 +69,39 @@ def _keys(problem, backend):
             for bb in dict.fromkeys((b, bucket_size(b)))]
 
 
-def candidate_tiles(widths, bucket, extra=()):
+def candidate_tiles(widths, bucket, extra=(), dtype="float32"):
     """Tiles worth sweeping for one bucket: the standard ladder clipped
     to the bucket, the bucket itself (grid of 1), and any extras —
-    deduped, VMEM-checked, default first so ties keep the default.
-    (The single source for the fused_mlp candidate set; the tuner and
-    the spec both consume it.)"""
+    deduped, VMEM-checked at the problem's actual dtype width (a bf16
+    net packs twice the tiles of an f32 one), default first so ties
+    keep the default.  (The single source for the fused_mlp candidate
+    set; the tuner and the spec both consume it.)"""
+    dtype_bytes = np.dtype(dtype).itemsize
     tiles = [DEFAULT_TILE]
     for t in _TILE_LADDER + (int(bucket),) + tuple(extra):
         t = int(t)
         if 0 < t <= bucket and t not in tiles:
             tiles.append(t)
-    return [t for t in tiles if fits_vmem(widths, t)]
+    return [t for t in tiles if fits_vmem(widths, t,
+                                          dtype_bytes=dtype_bytes)]
 
 
 def _cands(problem):
     return [{"batch_tile": t}
-            for t in candidate_tiles(problem["widths"], problem["batch"])]
+            for t in candidate_tiles(problem["widths"], problem["batch"],
+                                     dtype=problem["dtype"])]
 
 
 def _fits(problem, params, budget=None):
-    return fits_vmem(problem["widths"], params["batch_tile"], budget=budget)
+    # per-operand dtype threading: the cost model prices tiles at the
+    # problem's dtype width, not a hardcoded f32
+    return fits_vmem(problem["widths"], params["batch_tile"], budget=budget,
+                     dtype_bytes=np.dtype(problem["dtype"]).itemsize)
 
 
 def _supports(problem):
-    return fits_vmem(problem["widths"])
+    return fits_vmem(problem["widths"],
+                     dtype_bytes=np.dtype(problem["dtype"]).itemsize)
 
 
 SPEC = registry.register(registry.KernelSpec(
@@ -154,21 +162,26 @@ def fused_mlp_sharded(x, weights, biases, acts, *, mesh, data_axes,
     return f(x, list(weights), list(biases))
 
 
-def fused_mlp_from_spec(spec, params, x, *, mesh=None, data_axes=()):
-    """Adapter: run a pure-dense Sequential bundle through the kernel.
+def mlp_stack_from_spec(spec, params, x):
+    """Walk a pure-dense Sequential bundle spec into the fused kernel's
+    call shape: ``(x, weights, biases, acts)``.
 
     Layer spec pattern: dense [act] dense [act] ... ; activations between
     denses become the per-layer act, trailing dense gets 'identity'.
+    ``params=None`` walks acts/flatten only (weights come back empty) —
+    the int8 adapter serves pre-quantized residency instead.
     """
     weights, biases, acts = [], [], []
     pending_w = None
-    for layer_spec, p in zip(spec["layers"], params):
+    plist = params if params is not None else [None] * len(spec["layers"])
+    for layer_spec, p in zip(spec["layers"], plist):
         if layer_spec["kind"] == "dense":
             if pending_w is not None:
                 acts.append("identity")
-            weights.append(p["w"])
-            biases.append(p.get("b", jnp.zeros((p["w"].shape[1],),
-                                               p["w"].dtype)))
+            if p is not None:
+                weights.append(p["w"])
+                biases.append(p.get("b", jnp.zeros((p["w"].shape[1],),
+                                                   p["w"].dtype)))
             pending_w = True
         elif layer_spec["kind"] == "act":
             acts.append(layer_spec["name"])
@@ -177,6 +190,12 @@ def fused_mlp_from_spec(spec, params, x, *, mesh=None, data_axes=()):
             x = x.reshape(x.shape[0], -1)
     if pending_w is not None:
         acts.append("identity")
+    return x, weights, biases, acts
+
+
+def fused_mlp_from_spec(spec, params, x, *, mesh=None, data_axes=()):
+    """Adapter: run a pure-dense Sequential bundle through the kernel."""
+    x, weights, biases, acts = mlp_stack_from_spec(spec, params, x)
     if mesh is not None and data_axes:
         return fused_mlp_sharded(x, weights, biases, acts, mesh=mesh,
                                  data_axes=tuple(data_axes))

@@ -41,8 +41,8 @@ from repro.obs import metrics as _m
 
 _DISPATCHES = _m.counter(
     "repro_kernel_dispatch_total",
-    "kernel dispatches by resolved-params provenance",
-    ("kernel", "provenance"))
+    "kernel dispatches by resolved-params provenance and precision tier",
+    ("kernel", "provenance", "tier"))
 
 # ------------------------------------------------------------ VMEM budget ---
 # Every shipping TPU generation (v2 through v6e) exposes ~16 MiB of VMEM
@@ -123,7 +123,12 @@ class KernelSpec:
         model (None budget = :func:`device_vmem_budget`);
       * ``supports(problem) -> bool`` — whether the kernel path applies
         at all (fused_mlp: the net must fit VMEM);
-      * ``tol`` — (rtol, atol) validation tolerance, None = bit-exact.
+      * ``tol`` — (rtol, atol) validation tolerance, None = bit-exact;
+      * ``tier`` — precision tier ("f32" default, "int8" for the
+        quantized variants).  An int8 variant validates against its own
+        int8-*simulating* oracle at a tolerance sized to one requant
+        step; accuracy-vs-f32 is the quant gate's concern
+        (:mod:`repro.quant.gate`), measured on real calibration rows.
     """
 
     name: str
@@ -138,6 +143,7 @@ class KernelSpec:
     supports: Optional[Callable] = None
     cache_keys: Optional[Callable] = None
     tol: Optional[Tuple[float, float]] = None
+    tier: str = "f32"
     default_problems: Tuple[dict, ...] = ()
 
     def defaults(self) -> Dict[str, int]:
@@ -173,7 +179,9 @@ def all_specs() -> List[KernelSpec]:
 
 
 _BUILTIN_OPS = ("repro.kernels.fused_mlp.ops",
+                "repro.kernels.fused_mlp.int8",
                 "repro.kernels.flash_attention.ops",
+                "repro.kernels.flash_attention.int8",
                 "repro.kernels.stencil_gather.ops",
                 "repro.kernels.rwkv6_chunk.ops")
 
@@ -248,6 +256,44 @@ def resolve_params(spec: KernelSpec, problem: dict,
     return resolve_params_info(spec, problem, overrides)[0]
 
 
+def quantized_variant(spec: KernelSpec) -> Optional[KernelSpec]:
+    """The registered int8 twin of a base spec (``<name>_int8``), or
+    None when the kernel has no quantized variant."""
+    ensure_builtin_specs()
+    return _SPECS.get(spec.name + "_int8")
+
+
+def select_tier_spec(spec: KernelSpec, problem: Optional[dict] = None, *,
+                     gated: bool, explicit: Optional[str] = None
+                     ) -> Tuple[KernelSpec, str]:
+    """Precision-tier resolution for one dispatch site.
+
+    Extends the param-provenance order to tiers — **explicit >
+    tuned-quantized-if-gated > tuned > default**:
+
+      * ``explicit`` pins the tier: ``"f32"`` (REPRO_QUANT=never) always
+        serves the base spec, ``"int8"`` (REPRO_QUANT=force, the CI
+        fail-path drill) serves the variant whenever it exists and
+        supports the problem — the gate verdict is bypassed;
+      * otherwise the int8 variant serves only when the bundle's
+        accuracy gate passed (``gated=True``) *and* the variant's own
+        ``supports`` accepts the problem;
+      * anything else falls through to the base spec, whose params then
+        resolve tuned-before-default as always.
+
+    Returns ``(spec_to_dispatch, tier)``.
+    """
+    if explicit == "f32":
+        return spec, spec.tier
+    q = quantized_variant(spec)
+    if q is None or (explicit != "int8" and not gated):
+        return spec, spec.tier
+    if problem is not None and q.supports is not None \
+            and not q.supports(problem):
+        return spec, spec.tier
+    return q, q.tier
+
+
 def dispatch(spec: KernelSpec, problem: dict, arrays: tuple, *,
              force_kernel: bool = False, overrides: Optional[dict] = None):
     """The shared on-TPU / ``force_kernel`` / interpret-fallback branch.
@@ -266,20 +312,23 @@ def dispatch(spec: KernelSpec, problem: dict, arrays: tuple, *,
     if use_kernel and spec.supports is not None:
         use_kernel = bool(spec.supports(problem))
     if not use_kernel:
-        _DISPATCHES.inc(1, kernel=spec.name, provenance="ref")
+        _DISPATCHES.inc(1, kernel=spec.name, provenance="ref",
+                        tier=spec.tier)
         if TRACER.enabled:
             TRACER.instant("kernel.dispatch", cat="kernel",
-                           args={"kernel": spec.name, "path": "ref"})
+                           args={"kernel": spec.name, "path": "ref",
+                                 "tier": spec.tier})
         return spec.ref_call(problem, arrays)
     params, provenance = resolve_params_info(spec, problem, overrides)
     # dispatch() runs at jit trace time, so this lands once per compiled
     # shape, not once per serving call — an instant, not a span, because
     # kernel wall time belongs to XLA's own profile
-    _DISPATCHES.inc(1, kernel=spec.name, provenance=provenance)
+    _DISPATCHES.inc(1, kernel=spec.name, provenance=provenance,
+                    tier=spec.tier)
     if TRACER.enabled:
         TRACER.instant("kernel.dispatch", cat="kernel",
                        args={"kernel": spec.name, "params": dict(params),
-                             "provenance": provenance,
+                             "provenance": provenance, "tier": spec.tier,
                              "interpret": not on_tpu})
     return spec.run_call(problem, arrays, params, interpret=not on_tpu)
 

@@ -19,9 +19,15 @@ de-escalate) so one bad batch doesn't flap the alert.  The same machine
 class drives the SLO burn-rate alerts in :mod:`repro.obs.slo`, and the
 ``/healthz`` endpoint turns any CRITICAL state into a 503.
 
+Budgets resolve through one chain: an explicit ``set_budget`` wins,
+then the shared per-bundle registry :mod:`repro.quant.budgets` (the
+same numbers the quant gate certifies int8 eligibility against — the
+online drift alert and the offline quantization gate cannot disagree
+about what "accurate enough" means), then the default budget.
+
 Import contract: this module imports only stdlib + numpy +
-``repro.obs.{metrics,trace}`` — it is safe from ``core.region`` and
-pre-bootstrap.
+``repro.obs.{metrics,trace}`` + ``repro.quant.budgets`` (itself
+stdlib-only) — it is safe from ``core.region`` and pre-bootstrap.
 """
 from __future__ import annotations
 
@@ -225,6 +231,19 @@ class ShadowScorer:
             self._budgets.clear()
             self._default_budget = None
 
+    def _budget_for_locked(self, key: str) -> Tuple:
+        """(warn_at, crit_at) for a key: explicit ``set_budget`` wins,
+        then the shared registry (:mod:`repro.quant.budgets` — the quant
+        gate's numbers), then the default budget."""
+        b = self._budgets.get(key)
+        if b is not None:
+            return b
+        from repro.quant.budgets import budget_pair
+        b = budget_pair(key)
+        if b is not None:
+            return b
+        return self._default_budget or (None, None)
+
     # --------------------------------------------------------- sampling ---
     def sample(self) -> bool:
         """Bernoulli sampling decision for one request."""
@@ -331,8 +350,7 @@ class ShadowScorer:
                         else cur + a * (v - cur))
             st.samples += 1
             st.rows += int(rows)
-            warn_at, crit_at = self._budgets.get(
-                key, self._default_budget) or (None, None)
+            warn_at, crit_at = self._budget_for_locked(key)
             state = st.machine.step(st.rmse, warn_at, crit_at)
             vals = (st.rmse, st.max_abs, st.rel_l2)
         self._m_rmse.set(vals[0], key=key)
@@ -400,8 +418,7 @@ class ShadowScorer:
                     "rel_l2_ewma": st.rel_l2, "samples": st.samples,
                     "rows": st.rows, "state": st.machine.state,
                     "transitions": st.machine.transitions,
-                    "budget_rmse": (self._budgets.get(
-                        k, self._default_budget) or (None, None))[1]}
+                    "budget_rmse": self._budget_for_locked(k)[1]}
                 for k, st in self._keys.items()}
             rate = self.rate if self.enabled else 0.0
         return {"enabled": self.enabled, "rate": rate, "keys": keys}

@@ -1,0 +1,52 @@
+"""Quantized inference tier: int8 kernels behind per-bundle accuracy gates.
+
+The paper's claim is speedup at *minimal accuracy loss*; the roofline
+analysis (EXPERIMENTS.md) shows the dominant serving regime is
+HBM-bandwidth-bound, so quartering weight bytes is the largest remaining
+hot-path lever — but only behind the same accuracy criterion the shadow
+scorer enforces online.  The package splits the concern four ways:
+
+  * :mod:`repro.quant.budgets` — the shared per-bundle RMSE budget
+    registry (single source for the accuracy criterion: the quant gate,
+    the shadow scorer's drift alert, and ``serve_bench --shadow-check``
+    all read the same number, so the two accuracy gates cannot drift
+    apart);
+  * :mod:`repro.quant.quantize` — per-output-channel static weight
+    quantization plus the jnp int8-simulation reference paths (the
+    oracles the Pallas int8 kernels validate against, and the off-TPU
+    serving path);
+  * :mod:`repro.quant.calibrate` — calibration rows harvested from
+    held-out ``SurrogateDB`` assimilation data;
+  * :mod:`repro.quant.gate` — the per-bundle accuracy gate: RMSE of the
+    int8-simulated forward vs the f32 oracle on those rows, persisted as
+    a verdict in the ``quant_gate`` tune-cache namespace.  Only a gated
+    bundle is eligible for the int8 dispatch tier.
+
+Package import stays lazy: ``repro.obs.quality`` imports
+:mod:`repro.quant.budgets` (stdlib-only) from its budget-resolution
+path, and that must not drag jax in.
+"""
+from repro.quant.budgets import (budget_pair, clear_budgets, rmse_budget,
+                                 set_rmse_budget)
+
+__all__ = ["budget_pair", "clear_budgets", "gate_bundle", "gate_passed",
+           "quant_mlp_ref", "quantize_params",
+           "quantize_weights_per_channel", "rmse_budget",
+           "set_rmse_budget", "verdict"]
+
+_LAZY = {
+    "gate_bundle": "repro.quant.gate", "gate_passed": "repro.quant.gate",
+    "verdict": "repro.quant.gate",
+    "quant_mlp_ref": "repro.quant.quantize",
+    "quantize_params": "repro.quant.quantize",
+    "quantize_weights_per_channel": "repro.quant.quantize",
+}
+
+
+def __getattr__(name):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.quant' has no attribute "
+                             f"{name!r}")
+    import importlib
+    return getattr(importlib.import_module(mod), name)

@@ -1,0 +1,56 @@
+"""Shared per-bundle RMSE budget registry.
+
+One process-wide table mapping a bundle key (the serve-queue key: the
+bundle path) to its accuracy budget.  Three consumers read it:
+
+  * the **quant gate** (:mod:`repro.quant.gate`): a quantized variant is
+    eligible only if its RMSE vs the f32 oracle stays under the budget;
+  * the **shadow scorer** (:mod:`repro.obs.quality`): the online drift
+    alert criticals past the same number (its own ``set_budget`` still
+    wins for keys configured there explicitly);
+  * ``serve_bench --shadow-check``: the corruption drill's threshold,
+    which used to be a hardcoded constant that could silently diverge
+    from the gate's.
+
+Import contract: stdlib only — safe from ``repro.obs.quality`` (which
+must stay importable pre-bootstrap) and from anywhere else.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Tuple
+
+#: WARN fires at this fraction of the RMSE budget unless overridden
+DEFAULT_WARN_RATIO = 0.5
+
+_lock = threading.Lock()
+_budgets: Dict[str, Tuple[float, float]] = {}  # key -> (warn_at, crit_at)
+
+
+def set_rmse_budget(key: str, rmse_budget: float,
+                    warn_ratio: float = DEFAULT_WARN_RATIO) -> None:
+    """Register ``key``'s accuracy budget: RMSE past ``rmse_budget`` is
+    out of budget (gate fail / CRITICAL drift), past ``warn_ratio *
+    rmse_budget`` is the WARN band."""
+    pair = (float(rmse_budget) * float(warn_ratio), float(rmse_budget))
+    with _lock:
+        _budgets[str(key)] = pair
+
+
+def rmse_budget(key: str) -> Optional[float]:
+    """The hard RMSE budget for ``key``, or None when unregistered."""
+    with _lock:
+        pair = _budgets.get(str(key))
+    return pair[1] if pair is not None else None
+
+
+def budget_pair(key: str) -> Optional[Tuple[float, float]]:
+    """(warn_at, crit_at) for ``key``, or None when unregistered."""
+    with _lock:
+        return _budgets.get(str(key))
+
+
+def clear_budgets() -> None:
+    """Forget every registered budget (tests)."""
+    with _lock:
+        _budgets.clear()

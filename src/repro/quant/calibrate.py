@@ -1,0 +1,75 @@
+"""Calibration-row harvest for the quant gate.
+
+The gate measures quantization error on *real* application inputs, not
+synthetic gaussians: rows come from the held-out split of the same
+``SurrogateDB`` assimilation data the surrogate was trained on (the
+paper's §IV-B collection store), so the RMSE the gate certifies is the
+RMSE the shadow scorer will observe online.  The split uses the exact
+``train_test_split`` seed/fraction the trainer uses — calibration never
+sees training rows, and the gate's verdict is an honest generalization
+number, not a memorization one.
+
+:func:`activation_ranges` additionally harvests per-layer activation
+absmax over those rows.  The serving kernel re-derives row scales
+dynamically per batch (so the ranges are not baked into the bundle),
+but the harvested spread is recorded in the gate verdict for
+observability: a layer whose calibration absmax dwarfs its median is
+the classic outlier-channel failure mode when a gate RMSE comes back
+surprising.
+"""
+from __future__ import annotations
+
+import pathlib
+from typing import Dict, List, Union
+
+import numpy as np
+
+
+def calibration_rows(db, region: str, *, max_rows: int = 2048,
+                     test_frac: float = 0.2, seed: int = 0) -> np.ndarray:
+    """Held-out input rows for one region: ``[n, in_features]`` f32.
+
+    ``db`` is a :class:`repro.core.database.SurrogateDB` or a path to
+    one.  Raises when the region holds no held-out rows — gating
+    against an empty calibration set would certify nothing.
+    """
+    from repro.core.database import SurrogateDB
+    if isinstance(db, (str, pathlib.Path)):
+        db = SurrogateDB(db)
+    store = db.group(region)
+    _, held = store.train_test_split(test_frac=test_frac, seed=seed)
+    x = np.asarray(held["inputs"], np.float32)
+    if x.shape[0] == 0:
+        raise ValueError(
+            f"region {region!r}: no held-out calibration rows "
+            f"(test_frac={test_frac} of {store.name} is empty)")
+    return x[:max_rows]
+
+
+def activation_ranges(bundle_path, rows) -> List[Dict[str, float]]:
+    """Per-layer activation absmax stats of the f32 forward over the
+    calibration rows: ``[{"absmax", "p50"}, ...]``, one entry per dense
+    layer *input* (what the dynamic row quantizer will see at serve
+    time).  Pure observability — nothing is baked into the bundle.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.engine import bundle_norm
+    from repro.kernels.fused_mlp.fused_mlp import _ACTS
+    from repro.kernels.fused_mlp.ops import mlp_stack_from_spec
+    from repro.nn.serialize import load_model
+
+    net, params, spec = load_model(str(bundle_path))
+    norm = bundle_norm(spec, net)
+    x = jnp.asarray(np.asarray(rows, np.float32))
+    if norm is not None:
+        x = (x - norm[0]) / norm[1]
+    h, weights, biases, acts = mlp_stack_from_spec(spec, params, x)
+    stats: List[Dict[str, float]] = []
+    for w, b, act in zip(weights, biases, acts):
+        row_absmax = np.asarray(jnp.max(jnp.abs(h), axis=1))
+        stats.append({"absmax": float(row_absmax.max(initial=0.0)),
+                      "p50": float(np.median(row_absmax))
+                      if row_absmax.size else 0.0})
+        h = _ACTS[act](h @ w + b)
+    return stats

@@ -1,0 +1,147 @@
+"""Per-bundle accuracy gate for the int8 serving tier.
+
+A quantized variant is never served on speed alone: the bundle must
+first pass this gate — RMSE of the int8-*simulated* forward against the
+f32 oracle on held-out calibration rows (:mod:`repro.quant.calibrate`),
+in physical output units, judged against the **same per-bundle RMSE
+budget the shadow scorer alerts on** (:mod:`repro.quant.budgets`).  One
+accuracy criterion, two enforcement points: offline before eligibility,
+online while serving.
+
+Verdicts persist in the ``quant_gate`` tune-cache namespace
+(``artifacts/tune/quant_gate.json``) with the same schema-2 envelope and
+atomic-write discipline as kernel sweep results.  The record shape is
+chosen so the cache's own resolution rules enforce the gate:
+
+  * a **pass** is ``{"params": {"gated": 1}, "exact": True, ...}`` —
+    resolvable by ``best_params`` like any validated winner;
+  * a **fail** is ``{"params": {"gated": 0}, "exact": False, ...}`` —
+    ``exact=False`` means ``best_params`` can *never* resolve it, the
+    same invariant that keeps failed sweep candidates out of dispatch.
+
+Each verdict binds to the bundle's on-disk fingerprint (mtime_ns +
+size): retraining the bundle silently un-gates it until re-gated, so a
+stale blessing can never quantize fresh weights.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import numpy as np
+
+from repro.obs import metrics as _m
+from repro.quant.budgets import rmse_budget
+
+#: tune-cache namespace the verdicts persist under
+GATE_NAMESPACE = "quant_gate"
+
+_GATE_FAILS = _m.counter(
+    "repro_quant_gate_fail_total",
+    "quant gate evaluations that failed the RMSE budget", ("bundle",))
+_GATE_RMSE = _m.gauge(
+    "repro_quant_gate_rmse",
+    "observed int8-vs-f32 RMSE at the last gate evaluation", ("bundle",))
+
+
+def _cache():
+    from repro.tune.cache import default_cache
+    return default_cache(GATE_NAMESPACE)
+
+
+def _key(bundle_path) -> str:
+    return os.path.abspath(str(bundle_path))
+
+
+def verdict(bundle_path) -> Optional[dict]:
+    """The persisted gate record for a bundle, or None if never gated."""
+    return _cache().get(_key(bundle_path))
+
+
+def gate_passed(bundle_path) -> bool:
+    """True iff the bundle holds a *passing* verdict bound to its
+    current on-disk fingerprint.  A fail, a missing verdict, or a
+    verdict from before the last retrain all answer False — the engine
+    treats every False identically: serve f32."""
+    rec = verdict(bundle_path)
+    if not rec or not rec.get("exact", False):
+        return False
+    from repro.core.engine import _bundle_mtime
+    fp = rec.get("fingerprint")
+    return fp is not None and list(fp) == list(_bundle_mtime(str(bundle_path)))
+
+
+def _forwards(bundle_path, rows, scale_mult: float):
+    """(y_f32, y_int8sim) on the calibration rows, both in physical
+    units (bundle normalization applied around both paths — the budgets
+    are written in output units, not normalized ones)."""
+    import jax.numpy as jnp
+
+    from repro.core.engine import bundle_norm
+    from repro.kernels.fused_mlp.ops import mlp_stack_from_spec
+    from repro.nn.serialize import load_model
+    from repro.quant.quantize import quant_mlp_ref, quantize_params
+
+    net, params, spec = load_model(str(bundle_path))
+    kinds = {l["kind"] for l in spec["layers"]}
+    if not kinds <= {"dense", "act", "flatten"}:
+        raise ValueError(f"bundle {bundle_path!s}: int8 tier only covers "
+                         f"pure-MLP bundles, found layers {sorted(kinds)}")
+    norm = bundle_norm(spec, net)
+    x = jnp.asarray(np.asarray(rows, np.float32))
+    if norm is not None:
+        x = (x - norm[0]) / norm[1]
+    y32 = net.apply(params, x)
+    xq, weights, biases, acts = mlp_stack_from_spec(spec, params, x)
+    qlayers = quantize_params(weights, biases, scale_mult=scale_mult)
+    yq = quant_mlp_ref(xq, qlayers, acts)
+    if norm is not None:
+        y32 = y32 * norm[3] + norm[2]
+        yq = yq * norm[3] + norm[2]
+    return np.asarray(y32, np.float64), np.asarray(yq, np.float64)
+
+
+def gate_bundle(bundle_path, rows, *, budget: Optional[float] = None,
+                scale_mult: float = 1.0, budget_key: Optional[str] = None,
+                extra: Optional[dict] = None) -> dict:
+    """Evaluate and persist the gate verdict for one bundle.
+
+    ``rows``: calibration inputs (:func:`repro.quant.calibrate
+    .calibration_rows`).  ``budget``: explicit RMSE budget; when None it
+    resolves from the shared registry under ``budget_key`` (default: the
+    bundle path — the key the shadow scorer uses).  No budget anywhere
+    is a configuration error, not a free pass.  ``scale_mult`` feeds
+    straight into weight quantization (1.0 = correct absmax
+    calibration; the CI fail-path drill passes a wrong one) and is
+    recorded in the verdict so the engine serves the exact blessed
+    config.  Returns the persisted record.
+    """
+    key = _key(bundle_path)
+    if budget is None:
+        budget = rmse_budget(budget_key if budget_key is not None else key)
+        if budget is None and budget_key is None:
+            budget = rmse_budget(str(bundle_path))
+    if budget is None:
+        raise ValueError(
+            f"no RMSE budget for bundle {bundle_path!s}: pass budget= or "
+            f"register one via repro.quant.budgets.set_rmse_budget")
+    y32, yq = _forwards(bundle_path, rows, scale_mult)
+    rmse = float(np.sqrt(np.mean((yq - y32) ** 2)))
+    passed = bool(np.isfinite(rmse)) and rmse <= float(budget)
+
+    from repro.core.engine import InferenceEngine, _bundle_mtime
+    rec = {"params": {"gated": int(passed)}, "exact": passed,
+           "rmse": rmse, "budget": float(budget),
+           "rows": int(np.asarray(rows).shape[0]),
+           "scale_mult": float(scale_mult),
+           "fingerprint": list(_bundle_mtime(str(bundle_path)))}
+    if extra:
+        rec.update(extra)
+    _cache().put(key, rec)
+    _GATE_RMSE.set(rmse, bundle=str(bundle_path))
+    if not passed:
+        _GATE_FAILS.inc(1, bundle=str(bundle_path))
+    # the engine resolves its tier at load: drop the cached engine so
+    # the next get() re-reads the fresh verdict
+    InferenceEngine.invalidate(str(bundle_path))
+    return rec

@@ -1,0 +1,111 @@
+"""Per-channel int8 quantization math, shared by kernel and oracle.
+
+The factoring is chosen so every scale is constant over its dot's
+contraction dimension and therefore commutes out of the int32
+accumulator exactly:
+
+  * **weights** are quantized statically **per output channel**
+    (column j of ``W[in, out]`` gets its own absmax/127 scale): the
+    scale varies only along the output axis, never along ``in``;
+  * **activations** are quantized dynamically **per row** at serve time
+    (each batch row gets absmax/127): the scale varies only along the
+    batch axis, never along the feature (contraction) axis.
+
+So ``h @ W == (hs * hq) @ (wq * ws) == (hq @ wq) * hs[:, None] *
+ws[None, :]`` up to rounding — one int8 x int8 -> int32 MXU dot plus a
+rank-1 f32 dequant folded into the bias+activation epilogue.
+
+Every function here is the *definition* the Pallas kernels must agree
+with: :func:`quant_mlp_ref` is the jitted oracle the tuner validates
+``fused_mlp_int8`` candidates against, and the engine's off-TPU int8
+serving path.  Keep kernel and oracle using the same ops
+(``jnp.round`` — round-half-even — and the same zero-row guard) so
+interpret-mode parity is tight.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.kernels.fused_mlp.fused_mlp import _ACTS
+
+#: symmetric int8: values land in [-127, 127] (x/absmax * 127)
+QMAX = 127.0
+
+
+def quantize_weights_per_channel(w, *, scale_mult: float = 1.0):
+    """Static per-output-channel symmetric int8 quantization.
+
+    Returns ``(wq int8 [in, out], ws f32 [out])`` with ``w ~= wq * ws``.
+    ``scale_mult`` deliberately mis-scales the calibration (the gate's
+    fail-path drill injects a wrong calibration with it); 1.0 is the
+    correct absmax calibration.
+    """
+    w = jnp.asarray(w, jnp.float32)
+    absmax = jnp.max(jnp.abs(w), axis=0)
+    ws = jnp.where(absmax > 0, absmax, 1.0) / QMAX * float(scale_mult)
+    wq = jnp.clip(jnp.round(w / ws), -QMAX, QMAX).astype(jnp.int8)
+    return wq, ws
+
+
+def quantize_rows(h) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dynamic per-row symmetric int8 quantization of an activation
+    batch ``h [rows, feat]``: returns ``(hq int8, hs f32 [rows, 1])``.
+    A zero row (serve-path padding) quantizes to zeros with scale 1/127,
+    never a divide-by-zero."""
+    absmax = jnp.max(jnp.abs(h), axis=1, keepdims=True)
+    hs = jnp.where(absmax > 0, absmax, 1.0) / QMAX
+    hq = jnp.round(h / hs).astype(jnp.int8)
+    return hq, hs
+
+
+def quantize_kv(k, v):
+    """int8 KV-cache quantization for the flash-attention int8 path.
+
+    K is quantized **per token** (axis -1 absmax per [b, s, kv] token:
+    the score dot contracts over head_dim, so the scale must be constant
+    along it); V **per channel** (head_dim column: the p@v dot contracts
+    over tokens).  Returns ``(kq, ks [B,Skv,KV,1], vq, vs [B,1,KV,hd])``.
+    """
+    k = jnp.asarray(k, jnp.float32)
+    v = jnp.asarray(v, jnp.float32)
+    kmax = jnp.max(jnp.abs(k), axis=-1, keepdims=True)
+    ks = jnp.where(kmax > 0, kmax, 1.0) / QMAX
+    kq = jnp.round(k / ks).astype(jnp.int8)
+    vmax = jnp.max(jnp.abs(v), axis=1, keepdims=True)
+    vs = jnp.where(vmax > 0, vmax, 1.0) / QMAX
+    vq = jnp.round(v / vs).astype(jnp.int8)
+    return kq, ks, vq, vs
+
+
+def quantize_params(weights: Sequence, biases: Sequence, *,
+                    scale_mult: float = 1.0):
+    """Quantize a fused-MLP layer stack: per-layer ``(wq, ws, b_f32)``.
+
+    Biases stay f32 — they add into the dequantized epilogue, and at
+    <= 4096 floats per layer their bytes are noise next to the weights.
+    """
+    out: List[tuple] = []
+    for w, b in zip(weights, biases):
+        wq, ws = quantize_weights_per_channel(w, scale_mult=scale_mult)
+        out.append((wq, ws, jnp.asarray(b, jnp.float32)))
+    return out
+
+
+def qdot(hq, hs, wq, ws):
+    """One dequantized int8 layer dot: int8 x int8 -> int32 accumulate,
+    then the rank-1 (row scale x channel scale) f32 dequant."""
+    acc = jnp.dot(hq, wq, preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * hs * ws
+
+
+def quant_mlp_ref(x, qlayers, acts):
+    """int8-simulating fused-MLP forward (the f32-activation-flow twin
+    of the ``fused_mlp_int8`` Pallas kernel; also the off-TPU serving
+    path for gated bundles).  ``qlayers``: [(wq, ws, b), ...]."""
+    h = jnp.asarray(x, jnp.float32)
+    for (wq, ws, b), act in zip(qlayers, acts):
+        hq, hs = quantize_rows(h)
+        h = _ACTS[act](qdot(hq, hs, wq, ws) + b)
+    return h.astype(x.dtype)

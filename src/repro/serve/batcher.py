@@ -391,6 +391,14 @@ class Batcher:
             stats.on_batch(requests=len(requests) - len(bad),
                            rows=n - bad_rows, bucket=bucket, reason=reason,
                            busy_s=t1 - t0, latencies_s=lats)
+            # drift re-sweep trigger: a sustained bucket with no tune
+            # entry enqueues a background sweep of that exact cell.
+            # Lazy import + disabled fast path keep this a no-op unless
+            # REPRO_RESWEEP is on.
+            from repro.tune.resweep import get_resweeper
+            rs = get_resweeper()
+            if rs.enabled:
+                rs.observe(eng, bucket, stats)
 
     @staticmethod
     def _dtype_from_num(num: int):

@@ -243,6 +243,14 @@ class ServeStats:
         with self._lock:
             return {b: (e[0], e[1]) for b, e in self._bucket_lat.items()}
 
+    def bucket_batches(self, bucket: int) -> int:
+        """Completed-batch count for one bucket size — the drift
+        re-sweep trigger reads this to decide a bucket is *sustained*
+        (N real dispatches), not a one-off eager call."""
+        with self._lock:
+            ewma = self._bucket_lat.get(int(bucket))
+            return 0 if ewma is None else int(ewma[1])
+
     def request_events(self, window_s: Optional[float] = None,
                        now: Optional[float] = None):
         """Recent per-request ``(t_monotonic, latency_s, ok)`` outcomes,

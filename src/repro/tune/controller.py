@@ -76,22 +76,36 @@ _DECISIONS = _m.counter(
     ("key", "source"))
 
 
-def mlp_resources(widths, batch: int, dtype_bytes: int = 4):
-    """(flops, hbm_bytes) for one fused-MLP batch of ``batch`` rows."""
+def mlp_resources(widths, batch: int, dtype_bytes: int = 4,
+                  weight_dtype_bytes: Optional[int] = None):
+    """(flops, hbm_bytes) for one fused-MLP batch of ``batch`` rows.
+
+    ``weight_dtype_bytes`` prices the weight stream at its own width
+    when it differs from the activation dtype — the int8 tier quarters
+    the weight bytes (1 vs 4) while activations stay f32.  The scale
+    vectors the quantized layers add (one f32 per output channel) ride
+    along in the bias term, which already counts one f32 per output
+    channel; the model keeps them at f32 whatever the weights are.
+    """
+    if weight_dtype_bytes is None:
+        weight_dtype_bytes = dtype_bytes
     wsum = sum(a * b for a, b in zip(widths[:-1], widths[1:]))
     flops = batch * (2.0 * wsum + sum(widths[1:]))  # dots + bias adds
-    weight_bytes = (wsum + sum(widths[1:])) * dtype_bytes
+    weight_bytes = (wsum * weight_dtype_bytes
+                    + sum(widths[1:]) * dtype_bytes)  # + biases/scales
     io_bytes = batch * (widths[0] + widths[-1]) * dtype_bytes
     return flops, weight_bytes + io_bytes
 
 
 def predict_batch_latency_s(widths, batch: int, *, chips: int = 1,
                             dtype_bytes: int = 4,
+                            weight_dtype_bytes: Optional[int] = None,
                             overhead_s: float = 150e-6,
                             peak_flops: float = PEAK_FLOPS,
                             hbm_bw: float = HBM_BW) -> float:
     """Roofline-predicted wall time to serve one batch of ``batch`` rows."""
-    flops, hbm = mlp_resources(widths, batch, dtype_bytes)
+    flops, hbm = mlp_resources(widths, batch, dtype_bytes,
+                               weight_dtype_bytes)
     roof = Roofline(flops_global=flops, hbm_bytes_global=hbm,
                     coll_bytes_global=0.0, chips=chips, model_flops=flops,
                     peak_flops=peak_flops, hbm_bw=hbm_bw)

@@ -1,0 +1,463 @@
+"""Quantized inference tier: math, gate verdicts, engine tier
+resolution, cache schema, and the drift re-sweep trigger.
+
+The tune-cache tests pin the contract the gate leans on: a passing
+verdict is a normal schema-2 validated winner, a failing one is
+``exact=False`` — structurally unresolvable by ``best_params`` — and
+concurrent writers (an f32 sweep, an int8 sweep, and gate evaluations)
+can race the same ``artifacts/tune`` directory without ever tearing a
+file or corrupting the legacy-migration path.
+"""
+import json
+import multiprocessing
+import os
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.tune.cache as cache_mod
+from repro.quant.budgets import clear_budgets, rmse_budget, set_rmse_budget
+from repro.quant.gate import GATE_NAMESPACE
+from repro.tune.cache import TuneCache, best_params
+
+
+@pytest.fixture(autouse=True)
+def _isolate(tmp_path, monkeypatch):
+    """Every test gets empty budget + cache registries and no cached
+    engines; the gate namespace writes under tmp, never the repo's
+    artifacts/tune."""
+    from repro.core.engine import InferenceEngine
+    clear_budgets()
+    monkeypatch.setattr(cache_mod, "_default", {
+        GATE_NAMESPACE: TuneCache(GATE_NAMESPACE,
+                                  path=tmp_path / "quant_gate.json"),
+        "fused_mlp": TuneCache("fused_mlp", path=tmp_path / "fused_mlp.json"),
+        "fused_mlp_int8": TuneCache("fused_mlp_int8",
+                                    path=tmp_path / "fused_mlp_int8.json"),
+    })
+    InferenceEngine.invalidate()
+    yield
+    InferenceEngine.invalidate()
+    clear_budgets()
+
+
+def _bundle(tmp, widths=(4, 16, 2), seed=0):
+    from repro.nn import MLP
+    from repro.nn.serialize import save_model
+    net = MLP((1, widths[0]), list(widths[1:-1]), widths[-1])
+    return save_model(tmp / "m", net, net.init(jax.random.PRNGKey(seed)))
+
+
+def _rows(n, d=4, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+
+
+def _gate_budget(mp, rows, rel=0.05):
+    """Register a budget at ``rel`` x the bundle's f32 output RMS."""
+    from repro.nn.serialize import load_model
+    net, params, _ = load_model(mp)
+    y = np.asarray(net.apply(params, jnp.asarray(rows)))
+    budget = rel * float(np.sqrt(np.mean(np.square(y))))
+    set_rmse_budget(mp, budget)
+    return budget
+
+
+# ------------------------------------------------------------ quant math ----
+def test_weight_scale_factoring_is_exact():
+    """The dequant identity the kernels rely on: row and channel scales
+    are constant over the contraction dim, so they factor exactly out
+    of the int32 dot — no approximation beyond the int8 rounding."""
+    from repro.quant.quantize import (qdot, quantize_rows,
+                                      quantize_weights_per_channel)
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32))
+    h = jnp.asarray(rng.normal(size=(4, 16)).astype(np.float32))
+    wq, ws = quantize_weights_per_channel(w)
+    hq, hs = quantize_rows(h)
+    manual = (jnp.dot(hq.astype(jnp.float32), wq.astype(jnp.float32))
+              * hs * ws)
+    np.testing.assert_array_equal(np.asarray(qdot(hq, hs, wq, ws)),
+                                  np.asarray(manual))
+    # roundtrip error bounded by half an int8 step per element
+    np.testing.assert_allclose(np.asarray(wq, np.float32) * np.asarray(ws),
+                               np.asarray(w),
+                               atol=float(jnp.abs(w).max()) / 127.0)
+
+
+def test_quantize_zero_guards():
+    """All-zero rows/channels must quantize to zeros, never NaN."""
+    from repro.quant.quantize import (quantize_rows,
+                                      quantize_weights_per_channel)
+    w = jnp.zeros((8, 4), jnp.float32)
+    wq, ws = quantize_weights_per_channel(w)
+    assert np.isfinite(np.asarray(ws)).all()
+    assert not np.asarray(wq).any()
+    h = jnp.zeros((3, 8), jnp.float32)
+    hq, hs = quantize_rows(h)
+    assert np.isfinite(np.asarray(hs)).all()
+    assert not np.asarray(hq).any()
+
+
+def test_quant_mlp_ref_tracks_f32():
+    from repro.quant.quantize import quant_mlp_ref, quantize_params
+    rng = np.random.default_rng(1)
+    ws = [rng.normal(size=(8, 32)).astype(np.float32) * 0.3,
+          rng.normal(size=(32, 2)).astype(np.float32) * 0.3]
+    bs = [rng.normal(size=(32,)).astype(np.float32) * 0.1,
+          rng.normal(size=(2,)).astype(np.float32) * 0.1]
+    x = jnp.asarray(rng.normal(size=(64, 8)).astype(np.float32))
+    acts = ("relu", "identity")
+    h = x
+    for w, b, a in zip(ws, bs, acts):
+        h = jnp.dot(h, jnp.asarray(w)) + jnp.asarray(b)
+        if a == "relu":
+            h = jax.nn.relu(h)
+    yq = np.asarray(quant_mlp_ref(x, quantize_params(ws, bs), acts))
+    y32 = np.asarray(h)
+    rmse = float(np.sqrt(np.mean((yq - y32) ** 2)))
+    assert rmse < 0.05 * float(np.sqrt(np.mean(y32 ** 2)))
+
+
+# ------------------------------------------------- gate verdict lifecycle ---
+def test_gate_pass_roundtrips_schema2_and_binds_fingerprint(tmp_path):
+    from repro.quant.gate import gate_bundle, gate_passed, verdict
+    mp = _bundle(tmp_path)
+    rows = _rows(128)
+    budget = _gate_budget(mp, rows)
+    rec = gate_bundle(mp, rows)
+    assert rec["exact"] is True and rec["params"] == {"gated": 1}
+    assert rec["rmse"] <= budget and rec["budget"] == pytest.approx(budget)
+    assert gate_passed(mp)
+    # the verdict survives a cold re-read of the schema-2 file
+    data = json.loads((tmp_path / "quant_gate.json").read_text())
+    assert data["schema"] == 2 and data["kernel"] == GATE_NAMESPACE
+    assert verdict(mp)["fingerprint"] == rec["fingerprint"]
+    # a pass resolves through best_params like any validated winner
+    assert best_params(GATE_NAMESPACE, [os.path.abspath(mp)]) == {"gated": 1}
+    # retraining the bundle un-gates it until re-gated
+    _bundle(tmp_path, seed=7)
+    assert not gate_passed(mp)
+
+
+def test_gate_fail_is_never_resolvable(tmp_path):
+    from repro.obs import metrics as _m
+    from repro.quant.gate import gate_bundle, gate_passed
+    mp = _bundle(tmp_path)
+    rows = _rows(128)
+    _gate_budget(mp, rows)
+    fails = _m.counter("repro_quant_gate_fail_total",
+                       "quant gate evaluations that failed the RMSE budget",
+                       ("bundle",))
+    before = fails.value(bundle=mp)
+    rec = gate_bundle(mp, rows, scale_mult=64.0)
+    assert rec["exact"] is False and rec["params"] == {"gated": 0}
+    assert not gate_passed(mp)
+    assert fails.value(bundle=mp) == before + 1
+    # the TuneCache resolution invariant the fail shape exploits
+    assert best_params(GATE_NAMESPACE, [os.path.abspath(mp)]) is None
+
+
+def test_gate_without_budget_is_an_error(tmp_path):
+    from repro.quant.gate import gate_bundle
+    mp = _bundle(tmp_path)
+    with pytest.raises(ValueError, match="no RMSE budget"):
+        gate_bundle(mp, _rows(32))
+
+
+def test_calibration_rows_are_heldout(tmp_path):
+    from repro.core.database import SurrogateDB
+    from repro.quant.calibrate import calibration_rows
+    db = SurrogateDB(tmp_path / "db")
+    x, y = _rows(100), _rows(100, d=1, seed=1)
+    db.group("r").append(x, y, 0.0)
+    db.flush()
+    rows = calibration_rows(db, "r", max_rows=8)
+    assert rows.shape == (8, 4) and rows.dtype == np.float32
+    _, held = db.group("r").train_test_split()
+    np.testing.assert_array_equal(rows, held["inputs"][:8])
+    db.group("empty").append(_rows(0), _rows(0, d=1), 0.0)
+    db.flush()
+    with pytest.raises(ValueError, match="no held-out"):
+        calibration_rows(db, "empty")
+
+
+# --------------------------------------------------- legacy cache schema ----
+def test_legacy_schema1_migration_untouched_by_quant_writes(tmp_path):
+    """Writing int8/gate records into their own namespaces must leave a
+    legacy schema-1 fused_mlp file's migration byte-for-byte intact."""
+    legacy = tmp_path / "fused_mlp.json"
+    legacy.write_text(json.dumps(
+        {"4-16-2|float32|cpu|b32": {"batch_tile": 64, "us": 1.0,
+                                    "exact": True}}))
+    c = TuneCache("fused_mlp", path=legacy)
+    assert c.get("4-16-2|float32|cpu|b32")["params"] == {"batch_tile": 64}
+    migrated = legacy.read_text()
+    assert json.loads(migrated)["schema"] == 2
+    # now hammer the sibling namespaces
+    cache_mod._default["fused_mlp_int8"].put(
+        "4-16-2|float32|cpu|b32", {"params": {"batch_tile": 32},
+                                   "exact": True})
+    cache_mod._default[GATE_NAMESPACE].put(
+        "/some/bundle", {"params": {"gated": 1}, "exact": True})
+    assert legacy.read_text() == migrated
+    assert best_params("fused_mlp_int8",
+                       ["4-16-2|float32|cpu|b32"]) == {"batch_tile": 32}
+
+
+def _quant_cache_writer(path, wid, n_puts):
+    """Spawn worker: race pass/fail gate verdicts (wid 0/1) or int8
+    sweep records (wid 2) against siblings on the same directory."""
+    from repro.tune.cache import TuneCache
+    if wid == 2:
+        c = TuneCache("fused_mlp_int8", path=path)
+        for i in range(n_puts):
+            c.put(f"4-16-2|float32|cpu|b{32 << (i % 3)}",
+                  {"params": {"batch_tile": 32}, "us": float(i),
+                   "exact": True, "swept": []})
+        return
+    c = TuneCache("quant_gate", path=path)
+    for i in range(n_puts):
+        passed = wid == 0
+        c.put(f"/bundles/m{i % 5}",
+              {"params": {"gated": int(passed)}, "exact": passed,
+               "rmse": float(i), "budget": 1.0, "fingerprint": [i, i]})
+
+
+def test_concurrent_f32_int8_gate_writes_never_tear(tmp_path):
+    """A pass-writer and a fail-writer racing one quant_gate.json plus
+    an int8 sweep writing its sibling: every observable intermediate
+    must parse as a schema-2 cache, and surviving fail records must
+    stay unresolvable."""
+    gate_path = str(tmp_path / "quant_gate.json")
+    int8_path = str(tmp_path / "fused_mlp_int8.json")
+    ctx = multiprocessing.get_context("spawn")
+    procs = [ctx.Process(target=_quant_cache_writer,
+                         args=(gate_path if w < 2 else int8_path, w, 25))
+             for w in range(3)]
+    for p in procs:
+        p.start()
+    while any(p.is_alive() for p in procs):
+        for f in (gate_path, int8_path):
+            if os.path.exists(f):
+                try:
+                    data = json.loads(open(f).read())
+                except ValueError as e:  # pragma: no cover - the regression
+                    for p in procs:
+                        p.terminate()
+                    raise AssertionError(f"torn cache file {f}: {e}")
+                assert data.get("schema") == 2
+    for p in procs:
+        p.join(timeout=30)
+        assert p.exitcode == 0
+    gate = TuneCache("quant_gate", path=gate_path)
+    assert gate.entries()
+    for key, rec in gate.entries().items():
+        resolved = cache_mod._record_params(rec)
+        if rec["exact"]:
+            assert resolved == {"gated": 1}
+        else:
+            assert resolved is None  # fail records never resolve
+    int8 = TuneCache("fused_mlp_int8", path=int8_path)
+    assert all(r["params"]["batch_tile"] == 32
+               for r in int8.entries().values())
+
+
+# -------------------------------------------------- engine tier selection ---
+def test_engine_tier_modes(tmp_path, monkeypatch):
+    from repro.core.engine import InferenceEngine
+    from repro.obs import metrics as _m
+    from repro.quant.gate import gate_bundle
+    mp = _bundle(tmp_path)
+    rows = _rows(128)
+    budget = _gate_budget(mp, rows)
+    gate_bundle(mp, rows)
+
+    # auto off-TPU: quantization buys nothing, serve f32
+    monkeypatch.delenv("REPRO_QUANT", raising=False)
+    assert jax.default_backend() != "tpu"
+    assert InferenceEngine.get(mp).tier == "f32"
+
+    # never pins f32 even with a passing gate
+    monkeypatch.setenv("REPRO_QUANT", "never")
+    InferenceEngine.invalidate(mp)
+    y_f32 = np.asarray(InferenceEngine.get(mp).apply_batched(
+        jnp.asarray(rows)))
+
+    # force serves the gated int8 tier on any backend
+    monkeypatch.setenv("REPRO_QUANT", "force")
+    InferenceEngine.invalidate(mp)
+    eng = InferenceEngine.get(mp)
+    assert eng.tier == "int8" and eng._qlayers is not None
+    served = _m.counter("repro_quant_served_rows_total",
+                        "rows served by the gated int8 tier", ("bundle",))
+    before = served.value(bundle=mp)
+    yq = np.asarray(eng.apply_batched(jnp.asarray(rows)))
+    assert served.value(bundle=mp) >= before + rows.shape[0]
+    assert np.isfinite(yq).all()
+    assert float(np.sqrt(np.mean((yq - y_f32) ** 2))) <= budget
+
+
+def test_engine_force_without_gate_serves_f32(tmp_path, monkeypatch):
+    """force is not a gate bypass: no verdict (or a fail) means f32."""
+    from repro.core.engine import InferenceEngine
+    from repro.quant.gate import gate_bundle
+    mp = _bundle(tmp_path)
+    monkeypatch.setenv("REPRO_QUANT", "force")
+    assert InferenceEngine.get(mp).tier == "f32"
+    # a fail verdict keeps it f32, bit-identical to the never path
+    rows = _rows(64)
+    _gate_budget(mp, rows)
+    gate_bundle(mp, rows, scale_mult=64.0)
+    eng = InferenceEngine.get(mp)
+    assert eng.tier == "f32"
+    y_force = np.asarray(eng.apply_batched(jnp.asarray(rows)))
+    monkeypatch.setenv("REPRO_QUANT", "never")
+    InferenceEngine.invalidate(mp)
+    y_never = np.asarray(InferenceEngine.get(mp).apply_batched(
+        jnp.asarray(rows)))
+    np.testing.assert_array_equal(y_force, y_never)
+
+
+def test_engine_retrain_ungates(tmp_path, monkeypatch):
+    from repro.core.engine import InferenceEngine
+    from repro.quant.gate import gate_bundle
+    mp = _bundle(tmp_path)
+    rows = _rows(64)
+    _gate_budget(mp, rows)
+    gate_bundle(mp, rows)
+    monkeypatch.setenv("REPRO_QUANT", "force")
+    assert InferenceEngine.get(mp).tier == "int8"
+    # retrain: fresh weights, stale verdict -> f32 until re-gated
+    _bundle(tmp_path, seed=9)
+    assert InferenceEngine.get(mp).tier == "f32"
+
+
+def test_select_tier_spec_resolution_order():
+    from repro.kernels import registry
+    base = registry.get_spec("fused_mlp")
+    q = registry.get_spec("fused_mlp_int8")
+    problem = {"widths": (4, 16, 2), "acts": ("relu", "identity"),
+               "batch": 32, "dtype": "float32"}
+    assert registry.quantized_variant(base) is q
+    # ungated -> base; gated -> int8; explicit f32 pins base even gated;
+    # explicit int8 bypasses the gate (direct testing only)
+    assert registry.select_tier_spec(base, problem, gated=False)[0] is base
+    assert registry.select_tier_spec(base, problem, gated=True)[0] is q
+    assert registry.select_tier_spec(base, problem, gated=True,
+                                     explicit="f32")[0] is base
+    assert registry.select_tier_spec(base, problem, gated=False,
+                                     explicit="int8")[0] is q
+    # a problem the int8 variant can't hold falls back to base
+    fat = {"widths": (8192, 8192, 8192), "acts": ("relu", "identity"),
+           "batch": 32, "dtype": "float32"}
+    assert registry.select_tier_spec(base, fat, gated=True)[0] is base
+    # a kernel with no quantized twin always resolves itself
+    fa = registry.get_spec("stencil_gather")
+    assert registry.select_tier_spec(fa, None, gated=True)[0] is fa
+
+
+# -------------------------------------------- per-operand VMEM cost model ---
+def test_flash_vmem_model_prices_int8_kv_below_f32():
+    """The satellite fix: `_fits` prices each operand at its own dtype.
+    A KV cache that busts a tight budget at f32 fits as int8."""
+    from repro.kernels.flash_attention import int8 as fa8
+    from repro.kernels.flash_attention import ops as fa32
+    problem = {"b": 1, "sq": 128, "skv": 4096, "h": 8, "kv": 2, "hd": 128,
+               "causal": True, "q_offset": 0, "dtype": "float32"}
+    params = {"block_q": 128, "block_kv": 128}
+    budget = 7 * 2 ** 20
+    assert not fa32._fits(problem, params, budget=budget)
+    assert fa8._fits(problem, params, budget=budget)
+
+
+def test_fused_mlp_vmem_model_prices_int8_weights_below_f32():
+    from repro.kernels.fused_mlp.fused_mlp import fits_vmem
+    from repro.kernels.fused_mlp.int8 import fits_vmem_int8
+    widths = (256, 1024, 1024, 1)
+    budget = 5 * 2 ** 20
+    assert not fits_vmem(widths, 128, budget=budget)
+    assert fits_vmem_int8(widths, 128, budget=budget)
+
+
+def test_candidate_tiles_respect_activation_dtype():
+    """The f32 kernel's ladder is dtype-aware too: halving the
+    activation bytes admits tiles the f32 pricing rejects."""
+    from repro.kernels.fused_mlp.fused_mlp import fits_vmem
+    widths = (512, 1024, 1024, 64)
+    # find a tile that only fits at 2-byte activations
+    tight = next(b for b in (2 ** 20 * m for m in range(3, 64))
+                 if fits_vmem(widths, 512, budget=b, dtype_bytes=2)
+                 and not fits_vmem(widths, 512, budget=b, dtype_bytes=4))
+    assert fits_vmem(widths, 512, budget=tight, dtype_bytes=2)
+
+
+# ------------------------------------------------- shadow budget fallback ---
+def test_shadow_scorer_budget_chain(tmp_path):
+    """explicit set_budget > shared registry > default budget."""
+    from repro.obs.quality import ShadowScorer
+    s = ShadowScorer()
+    s.set_default_budget(0.5)
+    key = str(tmp_path / "bundle")
+    s.observe(key, rmse=0.1)
+    assert s.snapshot()["keys"][key]["budget_rmse"] == 0.5
+    set_rmse_budget(key, 0.2)
+    assert s.snapshot()["keys"][key]["budget_rmse"] == 0.2
+    s.set_budget(key, 0.3)
+    assert s.snapshot()["keys"][key]["budget_rmse"] == 0.3
+    assert rmse_budget(key) == 0.2  # registry itself unchanged
+
+
+# ----------------------------------------------------- resweep triggering ---
+def test_resweep_trigger_dedup_and_counter(tmp_path, monkeypatch):
+    from repro.obs import metrics as _m
+    from repro.tune.resweep import ResweepWorker
+    mp = _bundle(tmp_path)
+    spec = json.loads((tmp_path / "m" / "spec.json").read_text())
+    swept = []
+    monkeypatch.setattr(
+        ResweepWorker, "_sweep_cell",
+        staticmethod(lambda k, w, b, d, a: swept.append((k, w, b, a))))
+    worker = ResweepWorker(after=4)
+    worker.enable()
+    resweeps = _m.counter("repro_tune_resweep_total",
+                          "drift-triggered background kernel sweeps "
+                          "completed", ("kernel",))
+    eng = types.SimpleNamespace(spec=spec, tier="f32")
+    cold = types.SimpleNamespace(bucket_batches=lambda b: 1)
+    hot = types.SimpleNamespace(bucket_batches=lambda b: 100)
+    # below threshold: no trigger
+    assert not worker.observe(eng, 64, cold)
+    before = resweeps.value(kernel="fused_mlp")
+    # sustained bucket: one enqueue, then dedup
+    assert worker.observe(eng, 64, hot)
+    assert not worker.observe(eng, 64, hot)
+    assert worker.flush()
+    assert resweeps.value(kernel="fused_mlp") == before + 1
+    assert swept == [("fused_mlp", (4, 16, 2), 64, ("relu", "identity"))]
+    # an int8-tier engine re-sweeps both ladders
+    eng8 = types.SimpleNamespace(spec=spec, tier="int8")
+    assert worker.observe(eng8, 32, hot)
+    assert worker.flush()
+    kernels = {k for k, *_ in swept}
+    assert kernels == {"fused_mlp", "fused_mlp_int8"}
+    # a key the cache already resolves is suppressed, not re-swept
+    from repro.tune.cache import shape_key
+    key = shape_key((4, 16, 2), "float32", jax.default_backend(), 128)
+    cache_mod._default["fused_mlp"].put(
+        key, {"params": {"batch_tile": 64}, "exact": True})
+    n = len(swept)
+    assert not worker.observe(eng, 128, hot)
+    worker.flush()
+    assert len(swept) == n
+
+
+def test_resweep_disabled_is_inert(tmp_path):
+    from repro.tune.resweep import ResweepWorker
+    worker = ResweepWorker(after=1)
+    assert not worker.enabled
+    hot = types.SimpleNamespace(bucket_batches=lambda b: 100)
+    assert not worker.observe(types.SimpleNamespace(spec={}, tier="f32"),
+                              64, hot)

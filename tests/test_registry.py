@@ -25,6 +25,11 @@ PROBLEMS = {
     "flash_attention": {"b": 1, "sq": 32, "skv": 32, "h": 2, "kv": 1,
                         "hd": 16, "causal": True, "q_offset": 0,
                         "dtype": "float32"},
+    "flash_attention_int8": {"b": 1, "sq": 16, "skv": 64, "h": 2, "kv": 1,
+                             "hd": 16, "causal": True, "q_offset": 48,
+                             "dtype": "float32"},
+    "fused_mlp_int8": {"widths": (4, 16, 2), "acts": ("relu", "identity"),
+                       "batch": 32, "dtype": "float32"},
     "stencil_gather": {"h": 24, "w": 24, "out_h": 20, "out_w": 20,
                        "offsets": ((0, 1), (1, 0), (0, 0), (1, 2)),
                        "origin": (1, 1), "dtype": "float32"},
