@@ -1,0 +1,104 @@
+"""Render the machine-readable bench results as one trajectory table.
+
+Every ``--check`` bench persists its gate numbers as
+``artifacts/bench-json/BENCH_<name>.json`` (see
+:func:`benchmarks.common.write_bench_json`): rows/s, latency
+percentiles, and gate ratios stamped with the git sha and timestamp.
+This module folds whatever subset of those files exists into one
+compact markdown table for the CI job summary — the per-run point of
+the cross-PR perf trajectory.  It never runs a benchmark itself and
+exits 0 when no files exist (benches that didn't run this job simply
+don't get a row).
+
+  PYTHONPATH=src python -m benchmarks.bench_trajectory --markdown
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from benchmarks.common import BENCH_JSON
+
+
+def _fmt(v, unit=""):
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        v = f"{v:,.0f}" if abs(v) >= 100 else f"{v:.2f}"
+    return f"{v}{unit}"
+
+
+def _row(doc):
+    """One table row per bench file; each bench nominates its headline
+    throughput / latency / gate numbers (schemas differ by bench)."""
+    name = doc.get("bench", "?")
+    rows_s = p50 = p99 = None
+    gate = doc.get("gate") or {}
+    if name == "serve":
+        rows_s = doc.get("rows_per_s")
+        p50, p99 = doc.get("p50_ms"), doc.get("p99_ms")
+        g = (f"speedup {_fmt(gate.get('speedup_x'))}x "
+             f"(>= {_fmt(gate.get('required_speedup_x'))}x)")
+    elif name == "tenant":
+        worst = max((t for t in doc.get("tenants", [])),
+                    key=lambda t: t.get("p99_ratio", 0), default=None)
+        if worst:
+            p99 = worst.get("skew_p99_ms")
+        res = doc.get("residency") or {}
+        g = (f"worst p99 ratio {_fmt(gate.get('worst_p99_ratio'))}x "
+             f"(<= {_fmt(gate.get('p99_max_ratio'))}x), "
+             f"{res.get('evictions', 0)} evictions within budget")
+    elif name == "tune":
+        pols = doc.get("policies") or {}
+        ad = pols.get("adaptive") or {}
+        rows_s, p50 = ad.get("burst_rows_s"), ad.get("trickle_p50_ms")
+        p99 = ad.get("trickle_p99_ms")
+        g = (f"measured-loop burst {_fmt(gate.get('burst_ratio'))}x "
+             f"(>= {_fmt(gate.get('measured_burst_min_ratio'))}x), "
+             f"p99 {_fmt(gate.get('p99_ratio'))}x")
+    elif name == "quant":
+        apps = doc.get("apps") or []
+        best = max(apps, key=lambda a: a.get("speedup", 0), default={})
+        rows_s = best.get("int8_rows_s")
+        g = (f"best int8 {_fmt(gate.get('best_speedup_x'))}x "
+             f"(>= {_fmt(gate.get('min_speedup_x'))}x)")
+    else:
+        g = ", ".join(f"{k}={_fmt(v)}" for k, v in sorted(gate.items()))
+    sha = str(doc.get("git_sha", ""))[:9] or "-"
+    when = str(doc.get("iso_time", ""))[:19] or "-"
+    return (f"| {name} | {_fmt(rows_s)} | {_fmt(p50)} | {_fmt(p99)} | "
+            f"{g or '-'} | {sha} | {when} |")
+
+
+def render(paths):
+    docs = []
+    for p in sorted(paths):
+        try:
+            docs.append(json.loads(pathlib.Path(p).read_text()))
+        except (OSError, ValueError):
+            docs.append({"bench": pathlib.Path(p).stem, "gate": {}})
+    out = ["### Bench trajectory", "",
+           "| bench | rows/s | p50 ms | p99 ms | gate | sha | when (UTC) |",
+           "|---|---:|---:|---:|---|---|---|"]
+    out += [_row(d) for d in docs]
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--markdown", action="store_true",
+                    help="(default) print the markdown trajectory table")
+    ap.add_argument("--dir", default=str(BENCH_JSON),
+                    help="directory holding BENCH_<name>.json files")
+    args = ap.parse_args(argv)
+    paths = sorted(pathlib.Path(args.dir).glob("BENCH_*.json"))
+    if not paths:
+        print(f"(no bench-json files under {args.dir})")
+        return 0
+    print(render(paths))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,7 +1,12 @@
-"""Shared benchmark plumbing: timing, one-time surrogate training cache."""
+"""Shared benchmark plumbing: timing, one-time surrogate training cache,
+machine-readable bench results."""
 from __future__ import annotations
 
+import datetime
+import json
+import os
 import pathlib
+import subprocess
 import time
 
 import jax
@@ -9,6 +14,44 @@ import numpy as np
 
 ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
 MODELS = ART / "models"
+BENCH_JSON = ART / "bench-json"
+
+
+def _git_sha() -> str:
+    sha = os.environ.get("GITHUB_SHA", "").strip()
+    if sha:
+        return sha
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=str(ART.parent), timeout=10).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def write_bench_json(name: str, payload: dict) -> pathlib.Path:
+    """Persist one bench gate's numbers as ``BENCH_<name>.json``.
+
+    The human-readable markdown tables are per-PR artifacts; these JSON
+    files are the *machine-readable* perf trajectory — rows/s, latency
+    percentiles, and gate ratios stamped with the git sha and timestamp,
+    uploaded from CI so regressions across PRs are diffable by tooling
+    rather than by eyeball (rendered per-run by
+    :mod:`benchmarks.bench_trajectory`).
+    """
+    BENCH_JSON.mkdir(parents=True, exist_ok=True)
+    doc = {
+        "bench": name,
+        "git_sha": _git_sha(),
+        "timestamp": time.time(),
+        "iso_time": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+        "backend": jax.default_backend(),
+    }
+    doc.update(payload)
+    out = BENCH_JSON / f"BENCH_{name}.json"
+    out.write_text(json.dumps(doc, indent=1, sort_keys=True,
+                              default=float) + "\n")
+    return out
 
 
 def timeit(fn, *args, reps=5, warmup=1):

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import timeit
+from benchmarks.common import timeit, write_bench_json
 
 #: gated int8 fused_mlp must beat f32 rows/s by at least this factor on
 #: >= 1 served shape (HBM-bound regime: weights quarter, io unchanged)
@@ -366,7 +366,16 @@ def main(argv=None):
                     help="run the int8-tier acceptance gate")
     args = ap.parse_args(argv)
     if args.quant_check:
-        quant_check(fast=args.fast, markdown=args.markdown)
+        results = quant_check(fast=args.fast, markdown=args.markdown)
+        write_bench_json("quant", {
+            "apps": [{k: v for k, v in r.items()
+                      if k not in ("mp", "x", "y_f32", "widths")}
+                     | {"widths": list(r["widths"])}
+                     for r in results],
+            "gate": {"min_speedup_x": QUANT_MIN_SPEEDUP,
+                     "budget_rel": QUANT_BUDGET_REL,
+                     "best_speedup_x": max(r["speedup"] for r in results)},
+        })
         return 0
     for name, us, note in kernel_bench(fast=args.fast):
         print(f"{name:45s} {us:10.1f}us  {note}")

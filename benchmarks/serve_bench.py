@@ -32,6 +32,8 @@ import time
 import jax
 import numpy as np
 
+from benchmarks.common import write_bench_json
+
 CHECK_SPEEDUP = 3.0
 #: instrumentation gate: tracing ON must keep >= this fraction of the
 #: tracing-OFF rows/s (interleaved-pair median ratio, drift-immune)
@@ -60,6 +62,18 @@ FAULT_IDLE_MIN_RATIO = 0.98
 #: injected dispatch faults must trip the breaker OPEN within this many
 #: failing batches
 FAULT_OPEN_BATCHES = 8
+#: tenancy gate: the hot tenant submits this many times the traffic of
+#: each latency tenant in the skewed run
+TENANT_SKEW = 10
+#: tenancy gate: no tenant's p99 may degrade more than this factor vs
+#: the unskewed baseline (per-tenant, measured on the same scheduler)
+TENANT_P99_MAX_RATIO = 2.0
+#: tenancy gate: p99s below this floor compare as equal — at sub-ms
+#: latencies the ratio is scheduler noise, not starvation
+TENANT_P99_FLOOR_MS = 2.0
+#: residency gate: byte budget in units of one bundle's params, chosen
+#: so 3 served bundles never fit resident at once
+TENANT_RESIDENCY_FIT = 2.5
 
 
 def _bundle(path):
@@ -809,6 +823,193 @@ def fault_drill_check():
         BREAKERS.reset(mp)
 
 
+def _tenant_board():
+    """3 tenants, mixed QoS: two latency-tier (unequal weights) and one
+    throughput-tier tenant that will carry the skewed burst."""
+    from repro.serve import TenantBoard, TenantSpec
+    return TenantBoard([
+        TenantSpec("lat-a", tier="latency", weight=2.0),
+        TenantSpec("bulk", tier="throughput", weight=1.0),
+        TenantSpec("lat-b", tier="latency", weight=1.0),
+    ])
+
+
+def _tenant_run(bundles, *, skew, rounds, k_chunks=3, rows_per_chunk=8):
+    """Drive one tenant-traffic run; returns the board's snapshot.
+
+    Per round every tenant submits ``k_chunks`` chunks against its own
+    bundle (the hot tenant submits ``skew``x that), the hot tenant first
+    — the worst case for FIFO — then the round drains with an explicit
+    all-keys flush, whose key order the tenancy board picks by DRR under
+    overload.  Thread-free queue: deterministic timing, caller's thread.
+    """
+    from repro.serve import FlushPolicy, ServeQueue
+    board = _tenant_board()
+    policy = FlushPolicy(max_batch_rows=64, max_pending_rows=1 << 16)
+    queue = ServeQueue(policy, tenancy=board)
+    rng = np.random.default_rng(11)
+    chunk = {t: rng.standard_normal((rows_per_chunk, 5)).astype(np.float32)
+             for t in bundles}
+    order = ["bulk", "lat-a", "lat-b"]
+
+    def one_round():
+        futs = []
+        for t in order:
+            reps = k_chunks * (skew if t == "bulk" else 1)
+            futs += [queue.submit(bundles[t], chunk[t], tenant=t)
+                     for _ in range(reps)]
+        queue.flush()
+        for f in futs:
+            f.result(30)
+
+    one_round()  # warmup: compiles land outside the measured rounds
+    board_fresh = _tenant_board()
+    queue.tenancy = board_fresh
+    queue._batcher.tenancy = board_fresh
+    for _ in range(rounds):
+        one_round()
+    return board_fresh.snapshot()
+
+
+def tenant_check(fast=False, markdown=False):
+    """Gate the multi-tenant control plane end to end.
+
+    Three gates, per the control-plane contract:
+
+      1. **isolation** — under :data:`TENANT_SKEW`x load skew toward the
+         throughput tenant, no tenant's p99 may degrade more than
+         :data:`TENANT_P99_MAX_RATIO`x vs the unskewed baseline on the
+         same DRR scheduler;
+      2. **zero drops** — every submitted request resolves in both runs
+         (admission throttles at the door; it never loses work);
+      3. **residency** — with the byte budget set so only
+         ~:data:`TENANT_RESIDENCY_FIT` of 3 served bundles fit resident,
+         the budget is never exceeded (peak watermark), at least one
+         LRU eviction happens, and every evicted bundle serves again
+         through the shared invalidate->reload path.
+    """
+    import tempfile
+
+    from repro.core.engine import InferenceEngine
+    from repro.serve import FlushPolicy, ServeQueue
+    from repro.serve.residency import RESIDENCY
+
+    tmp = pathlib.Path(tempfile.mkdtemp(prefix="tenant_bench_"))
+    bundles = {t: _bundle(tmp / t) for t in ("lat-a", "bulk", "lat-b")}
+    rounds = 8 if fast else 16
+
+    base = _tenant_run(bundles, skew=1, rounds=rounds)
+    skewed = _tenant_run(bundles, skew=TENANT_SKEW, rounds=rounds)
+
+    results = []
+    failures = []
+    drops_total = 0
+    for t in sorted(bundles):
+        b99 = base[t]["latency_p99_ms"]
+        s99 = skewed[t]["latency_p99_ms"]
+        drops = base[t]["dropped_rows"] + skewed[t]["dropped_rows"]
+        drops_total += drops
+        ratio = (max(s99, TENANT_P99_FLOOR_MS)
+                 / max(b99, TENANT_P99_FLOOR_MS))
+        results.append({
+            "tenant": t, "tier": base[t]["tier"],
+            "weight": base[t]["weight"],
+            "base_p99_ms": b99, "skew_p99_ms": s99, "p99_ratio": ratio,
+            "served_rows_skew": skewed[t]["served_rows"],
+            "occupancy_skew": skewed[t]["occupancy"],
+            "dropped_rows": drops,
+        })
+        if ratio > TENANT_P99_MAX_RATIO:
+            failures.append(
+                f"tenant {t!r} p99 degraded {ratio:.2f}x under "
+                f"{TENANT_SKEW}x skew ({b99:.2f}ms -> {s99:.2f}ms, "
+                f"max {TENANT_P99_MAX_RATIO}x)")
+    if drops_total:
+        failures.append(f"{drops_total} rows dropped (must be zero)")
+
+    # --- residency: 3 bundles served through a budget fitting ~2.5 ---
+    InferenceEngine.invalidate()  # scenario-local byte accounting
+    one = InferenceEngine.get(bundles["lat-a"]).resident_nbytes
+    budget = int(one * TENANT_RESIDENCY_FIT)
+    RESIDENCY.set_budget(budget)
+    RESIDENCY.reset_stats()
+    res_drops = 0
+    try:
+        for b in bundles.values():
+            t = RESIDENCY.prefetch(b)  # admission-time warm
+            if t is not None:
+                t.join(30)
+        board = _tenant_board()
+        queue = ServeQueue(FlushPolicy(max_batch_rows=128,
+                                       max_pending_rows=1 << 16),
+                           tenancy=board)
+        rng = np.random.default_rng(13)
+        for _ in range(3):
+            futs = [queue.submit(b, rng.standard_normal((8, 5))
+                                 .astype(np.float32), tenant=t)
+                    for t, b in bundles.items()]
+            queue.flush()
+            for f in futs:
+                f.result(30)
+        rsnap = RESIDENCY.snapshot()
+        res_drops = sum(s["dropped_rows"]
+                        for s in board.snapshot().values())
+    finally:
+        RESIDENCY.set_budget(None)
+    if rsnap["peak_bytes"] > budget:
+        failures.append(f"residency budget exceeded: peak "
+                        f"{rsnap['peak_bytes']}B > budget {budget}B")
+    if rsnap["evictions"] < 1:
+        failures.append("residency never evicted despite 3 bundles over "
+                        f"a {TENANT_RESIDENCY_FIT}-bundle budget")
+    if res_drops:
+        failures.append(f"residency phase dropped {res_drops} rows")
+
+    residency = {"budget_bytes": budget, "peak_bytes": rsnap["peak_bytes"],
+                 "evictions": rsnap["evictions"],
+                 "prefetches": rsnap["prefetches"],
+                 "resident_bundles": rsnap["resident_bundles"],
+                 "bundle_bytes": one}
+    if markdown:
+        print(_tenant_markdown(results, residency))
+    for r in results:
+        print(f"[tenant {r['tenant']}] tier={r['tier']} "
+              f"w={r['weight']:.0f} base_p99={r['base_p99_ms']:.2f}ms "
+              f"skew_p99={r['skew_p99_ms']:.2f}ms "
+              f"ratio={r['p99_ratio']:.2f} drops={r['dropped_rows']}",
+              flush=True)
+    print(f"[tenant residency] peak={residency['peak_bytes']}B "
+          f"budget={budget}B evictions={residency['evictions']} "
+          f"prefetches={residency['prefetches']}", flush=True)
+    if failures:
+        raise SystemExit("tenant gate FAILED: " + "; ".join(failures))
+    print(f"[tenant gate] OK: {len(results)} tenants isolated under "
+          f"{TENANT_SKEW}x skew, zero drops, residency within budget",
+          flush=True)
+    return {"tenants": results, "residency": residency,
+            "skew": TENANT_SKEW, "rounds": rounds,
+            "gate": {"p99_max_ratio": TENANT_P99_MAX_RATIO,
+                     "worst_p99_ratio": max(r["p99_ratio"]
+                                            for r in results)}}
+
+
+def _tenant_markdown(results, residency):
+    out = ["### Multi-tenant isolation "
+           f"({TENANT_SKEW}x skew toward `bulk`)", "",
+           "| tenant | tier | weight | base p99 | skewed p99 | ratio | "
+           "drops |", "|---|---|---:|---:|---:|---:|---:|"]
+    for r in results:
+        out.append(f"| {r['tenant']} | {r['tier']} | {r['weight']:.0f} | "
+                   f"{r['base_p99_ms']:.2f}ms | {r['skew_p99_ms']:.2f}ms | "
+                   f"{r['p99_ratio']:.2f}x | {r['dropped_rows']} |")
+    out += ["", f"Residency: peak {residency['peak_bytes']}B of "
+            f"{residency['budget_bytes']}B budget "
+            f"({residency['evictions']} evictions, "
+            f"{residency['prefetches']} prefetches, "
+            f"{residency['resident_bundles']} of 3 bundles resident)."]
+    return "\n".join(out)
+
+
 def _markdown(rows, model_err):
     kv = dict(item.split("=", 1) for item in rows[0][2].split(";"))
     out = ["### Serving throughput (8-device host mesh)", "",
@@ -860,7 +1061,20 @@ def main():
                          "injected dispatch faults trip the breaker "
                          "OPEN, zero requests lost, recovery observable "
                          "on /metrics")
+    ap.add_argument("--tenant-check", action="store_true",
+                    help="gate the multi-tenant control plane: under "
+                         f"{TENANT_SKEW}x load skew no tenant's p99 may "
+                         f"degrade > {TENANT_P99_MAX_RATIO}x vs the "
+                         "unskewed baseline, zero requests dropped, and "
+                         "the residency byte budget is never exceeded "
+                         "while serving more bundles than fit resident")
     args = ap.parse_args()
+    if args.tenant_check:
+        # self-contained scenario (own queues/bundles): run before the
+        # throughput sweep so its latency windows see only tenant traffic
+        payload = tenant_check(fast=args.fast, markdown=args.markdown)
+        write_bench_json("tenant", payload)
+        return
     if args.trace:
         from repro.obs import enable_tracing
         enable_tracing()
@@ -873,22 +1087,35 @@ def main():
         print("name,us_per_call,derived")
         for n, us, derived in rows:
             print(f"{n},{us:.2f},{derived}", flush=True)
+    kv = dict(item.split("=", 1) for item in rows[0][2].split(";"))
+    bench_json = {
+        "rows_per_s": float(kv["coalesced_rows_s"]),
+        "percall_rows_per_s": float(kv["percall_rows_s"]),
+        "adaptive_rows_per_s": float(kv["adaptive_rows_s"]),
+        "p50_ms": float(kv["p50_ms"]), "p99_ms": float(kv["p99_ms"]),
+        "occupancy": float(kv["occupancy"]),
+        "gate": {"speedup_x": float(kv["speedup_x"]),
+                 "required_speedup_x": CHECK_SPEEDUP,
+                 "bitwise_equal": kv["bitwise_equal"] == "True"},
+    }
     if args.check:
-        kv = dict(item.split("=") for item in rows[0][2].split(";"))
         speedup = float(kv["speedup_x"])
         same = kv["bitwise_equal"] == "True"
         if speedup < CHECK_SPEEDUP or not same:
+            write_bench_json("serve", bench_json)
             raise SystemExit(
                 f"serving smoke FAILED: speedup_x={speedup:.2f} "
                 f"(need >= {CHECK_SPEEDUP}) bitwise_equal={same}")
         print(f"[serve smoke] OK: {speedup:.2f}x coalesced over per-call")
     if args.overhead_check:
-        overhead_check(fast=args.fast)
+        bench_json["gate"]["trace_overhead_ratio"] = \
+            overhead_check(fast=args.fast)
     if args.fault_check:
         fault_overhead_check(fast=args.fast)
         fault_drill_check()
     if args.shadow_check:
-        shadow_overhead_check(fast=args.fast)
+        bench_json["gate"]["shadow_overhead_ratio"] = \
+            shadow_overhead_check(fast=args.fast)
         shadow_alert_check()
         if args.trace:
             # refresh the metrics snapshots so the exported artifacts
@@ -900,6 +1127,7 @@ def main():
             path.with_suffix(".metrics.json").write_text(
                 json.dumps(metrics.collect(), indent=1))
             path.with_suffix(".prom").write_text(metrics.dump())
+    write_bench_json("serve", bench_json)
 
 
 if __name__ == "__main__":

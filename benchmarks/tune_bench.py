@@ -40,6 +40,8 @@ import time
 import jax
 import numpy as np
 
+from benchmarks.common import write_bench_json
+
 CHECK_RATIO = 0.9        # adaptive rows/s vs best static
 MEASURED_BURST_RATIO = 0.85   # closed-loop rows/s vs open-loop (median)
 MEASURED_P99_SLACK = 1.5      # closed-loop p99 <= slack x open-loop (median)
@@ -329,6 +331,31 @@ def main():
         for n, us, derived in krows + srows:
             print(f"{n},{us:.2f},{derived}", flush=True)
 
+    def _num(v):
+        try:
+            return float(v)
+        except (TypeError, ValueError):
+            return v
+
+    bench_json = {
+        "kernels": {
+            name.split("/", 1)[1]: {
+                k: (_num(v) if k in ("tuned_us", "default_us", "speedup_x")
+                    else v)
+                for k, v in (item.split("=", 1)
+                             for item in derived.split(";"))}
+            for name, _, derived in krows},
+        "policies": {name: {"burst_rows_s": r["burst_rows_s"],
+                            "trickle_p50_ms": r["trickle_p50_ms"],
+                            "trickle_p99_ms": r["trickle_p99_ms"]}
+                     for name, r in results.items()
+                     if "burst_rows_s" in r},
+        "gate": {"adaptive_min_ratio": CHECK_RATIO,
+                 "measured_burst_min_ratio": MEASURED_BURST_RATIO,
+                 "measured_p99_max_ratio": MEASURED_P99_SLACK,
+                 **results["measured_vs_openloop"]},
+    }
+    write_bench_json("tune", bench_json)
     if args.check:
         failures = []
         for name, _, derived in krows:

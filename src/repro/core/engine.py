@@ -19,6 +19,7 @@ with coarse timestamps) should call ``invalidate()`` after writing.
 from __future__ import annotations
 
 import os
+import threading
 import warnings
 from typing import Optional
 
@@ -84,6 +85,13 @@ def _bundle_mtime(path: str) -> tuple:
 
 class InferenceEngine:
     _cache: dict = {}
+    # guards _cache and in-place reloads: concurrent get() calls on an
+    # evicted/stale bundle must produce exactly ONE reload (the serve
+    # path may race a residency eviction from another thread), and a
+    # reader must never observe a half-loaded engine.  Reentrant: a
+    # load under the lock may evict LRU victims, which pops this same
+    # cache.
+    _cache_lock = threading.RLock()
 
     def __init__(self, model_path: str, use_kernel: str = "auto"):
         self.path = str(model_path)
@@ -116,6 +124,31 @@ class InferenceEngine:
         self.tier = self._resolve_tier()
         if self.tier == "int8":
             self._quantize_residency()
+        # residency accounting: meter this load's bytes against the LRU
+        # byte budget and drop whatever the manager says must go.  The
+        # victims leave through invalidate() — eviction and retrain
+        # invalidation share one path on purpose.
+        self.resident_nbytes = self._params_nbytes()
+        from repro.serve.residency import RESIDENCY
+        for victim in RESIDENCY.note_load(self.path, self.resident_nbytes):
+            type(self).invalidate(victim)
+
+    def _params_nbytes(self) -> int:
+        """Bytes of device residency this bundle's weights occupy
+        (params, plus the int8 layers + scales when quantized)."""
+        import numpy as np
+
+        def nbytes(leaf) -> int:
+            try:
+                return int(leaf.size) * int(np.dtype(leaf.dtype).itemsize)
+            except Exception:
+                return 0
+
+        total = sum(nbytes(p) for p in jax.tree_util.tree_leaves(self.params))
+        if self._qlayers is not None:
+            total += sum(nbytes(a)
+                         for a in jax.tree_util.tree_leaves(self._qlayers))
+        return total
 
     def _resolve_tier(self) -> str:
         """Which precision tier this engine serves (resolved once per
@@ -177,22 +210,33 @@ class InferenceEngine:
         this engine see the fresh weights.
         """
         key = str(model_path)
-        eng = cls._cache.get(key)
-        if eng is None:
-            eng = cls._cache[key] = cls(key)
-        elif _bundle_mtime(key) != eng._mtime:
-            # any fingerprint change reloads — including rollbacks to an
-            # older bundle (copy2/mv preserve the original, older mtime)
-            eng.reload()
+        with cls._cache_lock:
+            eng = cls._cache.get(key)
+            if eng is None:
+                eng = cls._cache[key] = cls(key)
+            elif _bundle_mtime(key) != eng._mtime:
+                # any fingerprint change reloads — including rollbacks to
+                # an older bundle (copy2/mv preserve the original, older
+                # mtime)
+                eng.reload()
+        from repro.serve.residency import RESIDENCY
+        RESIDENCY.touch(key)
         return eng
 
     @classmethod
     def invalidate(cls, model_path=None):
-        """Drop cached engine(s) so the next get() reloads from disk."""
-        if model_path is None:
-            cls._cache.clear()
-        else:
-            cls._cache.pop(str(model_path), None)
+        """Drop cached engine(s) so the next get() reloads from disk.
+
+        Residency eviction lands here too: the manager's LRU victims are
+        invalidated exactly like a retrained bundle, so both reload
+        through the same get() path."""
+        with cls._cache_lock:
+            if model_path is None:
+                cls._cache.clear()
+            else:
+                cls._cache.pop(str(model_path), None)
+        from repro.serve.residency import RESIDENCY
+        RESIDENCY.drop(model_path)
 
     def reload(self):
         """Re-read the bundle from disk and drop compiled applies."""

@@ -129,6 +129,17 @@ class ObsServer:
                 ok = False
             queues[name] = ok
         dead = [f"queue:{n}" for n, ok in queues.items() if not ok]
+        for name, q in sorted(self._queues.items()):
+            # tenancy-aware queues name misbehaving tenants (dropping
+            # rows, stuck past their pending cap); duck-typed so plain
+            # queues and stubs keep working
+            offenders = getattr(q, "tenant_offenders", None)
+            if offenders is None:
+                continue
+            try:
+                dead += [f"tenant:{t}" for t in offenders()]
+            except Exception:
+                pass
         pod: dict = {}
         try:
             # lazy: multihost stays jax-free and obs must not force it in

@@ -100,6 +100,10 @@ class Batcher:
         self.min_bucket = min_bucket
         self.scratch = scratch or ScratchPool()
         self.retry = retry or DEFAULT_RETRY
+        # ServeQueue attaches its TenantBoard here so per-request
+        # outcomes (served rows + latencies, drops) land on the tenant
+        # that submitted them; None = tenancy-free queue, zero overhead
+        self.tenancy = None
         if engine_for is None:
             def engine_for(key):
                 from repro.core.engine import InferenceEngine
@@ -218,16 +222,55 @@ class Batcher:
             return use_mesh(None)
         return use_mesh(ctx.mesh, ctx.multi_pod)
 
-    @staticmethod
-    def _fail_all(requests, exc, stats, reason, busy_s, *,
+    def _fail_all(self, requests, exc, stats, reason, busy_s, *,
                   record_breaker_key=None):
         for r in requests:
             r.future.set_exception(exc)
+        self._note_dropped(requests)
         stats.on_failure(requests=len(requests),
                          rows=sum(r.n for r in requests), reason=reason,
                          busy_s=busy_s)
         if record_breaker_key is not None:
             BREAKERS.record_failure(record_breaker_key)
+
+    # ------------------------------------------------ tenant attribution ---
+    def _note_dropped(self, requests) -> None:
+        board = self.tenancy
+        if board is None or not requests:
+            return
+        agg = {}
+        for r in requests:
+            t = getattr(r, "tenant", None)
+            if t is not None:
+                c = agg.setdefault(t, [0, 0])
+                c[0] += 1
+                c[1] += r.n
+        for t, (n_req, n_rows) in agg.items():
+            board.on_dropped(t, n_req, n_rows)
+
+    def _note_served(self, requests, bad, lats) -> None:
+        """Attribute a scattered batch's outcomes per tenant.  ``lats``
+        aligns with the non-``bad`` requests in order (exactly how the
+        scatter loops build it)."""
+        board = self.tenancy
+        if board is None or not requests:
+            return
+        self._note_dropped([r for i, r in enumerate(requests) if i in bad])
+        li = 0
+        agg = {}
+        for i, r in enumerate(requests):
+            if i in bad:
+                continue
+            lat = lats[li]
+            li += 1
+            t = getattr(r, "tenant", None)
+            if t is None:
+                continue
+            c = agg.setdefault(t, [0, []])
+            c[0] += r.n
+            c[1].append(lat)
+        for t, (rows, ls) in agg.items():
+            board.on_served(t, rows, ls)
 
     @staticmethod
     def _screen_nonfinite(requests, Y) -> tuple:
@@ -377,6 +420,7 @@ class Batcher:
             tr.record("batch.scatter", t1, time.monotonic(), cat="batch",
                       args={"key": key, "batch": bid,
                             "requests": len(requests)})
+        self._note_served(requests, bad, lats)
         if bad:
             _NONFINITE.inc(bad_rows, key=key)
             tr.instant("batch.nonfinite", cat="batch",
@@ -530,6 +574,7 @@ class Batcher:
                        args={"key": key, "batch": bid, "error": repr(e)})
             for r in requests:
                 r.future.set_exception(e)
+            self._note_dropped(requests)
             stats.on_failure(requests=len(requests), rows=local_n,
                              reason=reason, busy_s=time.monotonic() - t0)
             BREAKERS.record_failure(key)
@@ -561,6 +606,7 @@ class Batcher:
             if traced:
                 tr.rec("serve.request", "serve", r.t_enqueue,
                        time.monotonic(), r.trace, rargs)
+        self._note_served(requests, bad, lats)
         if bad:
             _NONFINITE.inc(bad_rows, key=key)
             stats.on_failure(requests=len(bad), rows=bad_rows,

@@ -17,6 +17,15 @@ Backpressure: total queued rows are capped at
 drains (or raises :class:`Backpressure` with ``policy.block=False`` /
 on timeout), so a runaway producer cannot grow the queue unboundedly.
 
+Multi-tenancy (opt-in): construct with ``tenancy=TenantBoard(...)`` and
+submit with ``tenant="name"``.  Admission then charges the tenant's
+token bucket before enqueue, per-tenant pending caps add a second
+backpressure layer under the global one, and — under overload (pending
+rows exceed one ``max_batch_rows`` of capacity) — flush order across
+keys is picked by deficit-round-robin over tenant weights instead of
+FIFO, so one tenant's burst cannot starve another's deadline
+(:mod:`repro.serve.tenancy`).
+
 Threading model: all queue state lives behind one condition variable.
 Dispatches happen *outside* the lock (in the flusher's thread), so
 producers keep enqueueing for other keys while a mega-batch runs.
@@ -112,13 +121,16 @@ class ServeFuture:
 
 
 class _Request:
-    __slots__ = ("key", "x", "n", "future", "t_enqueue", "ctx", "trace")
+    __slots__ = ("key", "x", "n", "future", "t_enqueue", "ctx", "trace",
+                 "tenant")
 
-    def __init__(self, key, x, n, future, t_enqueue, ctx, trace=None):
+    def __init__(self, key, x, n, future, t_enqueue, ctx, trace=None,
+                 tenant=None):
         self.key, self.x, self.n = key, x, n
         self.future, self.t_enqueue = future, t_enqueue
         self.ctx = ctx  # submitter's ShardCtx: sharding is thread-local
         self.trace = trace  # obs trace id, minted at submit, rides along
+        self.tenant = tenant  # tenancy id (None on tenancy-free queues)
 
 
 class _StatsGate:
@@ -162,11 +174,20 @@ class _StatsGate:
 class ServeQueue:
     def __init__(self, policy: FlushPolicy = FlushPolicy(), *,
                  batcher: Optional[Batcher] = None, controller=None,
-                 latency_window: int = 2048):
+                 tenancy=None, latency_window: int = 2048):
         self.policy = policy
         self.controller = controller  # e.g. tune.AdaptiveFlushController
+        self.tenancy = tenancy  # repro.serve.tenancy.TenantBoard (or None)
         self.latency_window = int(latency_window)
         self._batcher = batcher or Batcher(min_bucket=policy.min_bucket)
+        if tenancy is not None:
+            # the batcher attributes per-request outcomes (served rows,
+            # latencies, drops) back to tenants; the controller reads
+            # per-key QoS tiers for its deadline targets
+            self._batcher.tenancy = tenancy
+            if controller is not None and \
+                    getattr(controller, "tenancy", None) is None:
+                controller.tenancy = tenancy
         self._cv = threading.Condition()
         self._pending: Dict[str, List[_Request]] = {}
         self._rows_total = 0
@@ -254,25 +275,58 @@ class ServeQueue:
             return t is None or (t.is_alive() and not self._stopping)
 
     def snapshot(self) -> Dict[str, object]:
-        """Liveness plus every key's serve-stats snapshot (``/varz``)."""
+        """Liveness plus every key's serve-stats snapshot (``/varz``);
+        with a tenancy board, the per-tenant occupancy/p99/drop board
+        and the weight-residency state ride along."""
         with self._cv:
             stats = dict(self._stats)
-        return {"liveness": self.liveness(),
+        snap = {"liveness": self.liveness(),
                 "keys": {k: s.snapshot() for k, s in sorted(stats.items())}}
+        if self.tenancy is not None:
+            snap["tenants"] = self.tenancy.snapshot()
+            from repro.serve.residency import RESIDENCY
+            snap["residency"] = RESIDENCY.snapshot()
+        return snap
+
+    def tenant_offenders(self) -> List[str]:
+        """Tenant ids misbehaving now (dropping rows / stuck past their
+        pending cap) — ``/healthz`` names them ``tenant:<id>``."""
+        if self.tenancy is None:
+            return []
+        return self.tenancy.offenders()
 
     # ----------------------------------------------------------- submit ---
-    def submit(self, key: str, rows) -> ServeFuture:
-        """Queue ``rows`` ([n, ...features], n >= 1) for bundle ``key``."""
+    def submit(self, key: str, rows, *,
+               tenant: Optional[str] = None) -> ServeFuture:
+        """Queue ``rows`` ([n, ...features], n >= 1) for bundle ``key``.
+
+        With a tenancy board attached, ``tenant`` names the submitting
+        tenant (default tenant otherwise): admission charges its token
+        bucket *before* enqueue — an empty bucket blocks for refill
+        (``policy.block``) or raises
+        :class:`repro.serve.tenancy.TenantThrottled` — and the tenant's
+        pending-row cap backpressures under the global one.
+        """
         from repro.dist.sharding import current_ctx
+        board = self.tenancy
+        if board is not None:
+            from repro.serve.tenancy import DEFAULT_TENANT
+            tenant = tenant or DEFAULT_TENANT
         x = jnp.asarray(rows)
         if x.ndim < 1 or x.shape[0] < 1:
             raise ValueError(f"submit needs [n, ...] rows, got {x.shape}")
         n = int(x.shape[0])
+        if board is not None:
+            # token-bucket admission happens at the door, outside every
+            # lock: refill is wall-clock, so a blocked submit sleeps in
+            # the board rather than waiting on the queue's condvar
+            board.admit(tenant, n, block=self.policy.block,
+                        timeout_s=self.policy.block_timeout_s)
         fut = ServeFuture(self, key)
         t_sub = time.monotonic()
         trace = TRACER.new_trace_id() if TRACER.enabled else None
         fut.trace = trace  # shadow scoring rides the same id
-        req = _Request(key, x, n, fut, t_sub, current_ctx(), trace)
+        req = _Request(key, x, n, fut, t_sub, current_ctx(), trace, tenant)
         deadline = t_sub + self.policy.block_timeout_s
         while True:
             admitted, drain_inline, flush_inline = False, False, False
@@ -284,8 +338,10 @@ class ServeQueue:
                         f"feature-shape mismatch for {key!r}: queued "
                         f"{pend[0].x.shape[1:]}, submitted {x.shape[1:]}")
                 # backpressure: an oversized request is admitted alone into
-                # an empty queue (flushing as its own batch: no deadlock)
-                if self._admit_locked(n):
+                # an empty queue (flushing as its own batch: no deadlock);
+                # the tenant's own pending cap applies under the global one
+                if self._admit_locked(n) and (
+                        board is None or board.has_room(tenant, n)):
                     admitted = True
                     self._pending.setdefault(key, []).append(req)
                     self._rows_total += n
@@ -314,6 +370,8 @@ class ServeQueue:
                     # submitting thread must make space itself
                     drain_inline = True
             if admitted:
+                if board is not None:
+                    board.on_enqueue(tenant, key, n)
                 if trace is not None:
                     # submitter-thread span: admission (incl. any time
                     # blocked on backpressure).  The dispatcher's
@@ -355,7 +413,7 @@ class ServeQueue:
         so concurrent submits proceed.
         """
         dispatched = 0
-        keys = [key] if key is not None else self.keys()
+        keys = [key] if key is not None else self._flush_order()
         for k in keys:
             with self._cv:
                 reqs = self._pending.pop(k, [])
@@ -365,9 +423,39 @@ class ServeQueue:
                 if rows:
                     self._cv.notify_all()  # wake backpressured submitters
             if reqs:
+                self._note_dispatch(reqs)
                 self._batcher.dispatch(k, reqs, st, reason)
                 dispatched += rows
         return dispatched
+
+    def _flush_order(self) -> List[str]:
+        """Key order for an all-keys flush: FIFO insertion order, unless
+        a tenancy board is attached and the queue is overloaded (more
+        pending rows than one max-batch of capacity) — then deficit-
+        round-robin over tenant weights picks who drains first."""
+        with self._cv:
+            if self.tenancy is None or len(self._pending) < 2 or \
+                    self._rows_total <= self.policy.max_batch_rows:
+                return list(self._pending)
+            pairs = [(k, sum(r.n for r in reqs))
+                     for k, reqs in self._pending.items()]
+        try:
+            return self.tenancy.order_keys(pairs)
+        except Exception as exc:
+            note_static_fallback("tenancy", "drr-error", repr(exc))
+            return [k for k, _ in pairs]
+
+    def _note_dispatch(self, reqs: List) -> None:
+        """Tenant accounting for rows leaving the queue (any reason)."""
+        if self.tenancy is None:
+            return
+        agg: Dict[str, int] = {}
+        for r in reqs:
+            t = getattr(r, "tenant", None)
+            if t is not None:
+                agg[t] = agg.get(t, 0) + r.n
+        for t, rows in agg.items():
+            self.tenancy.on_dispatch(t, rows)
 
     def pod_flush(self, key: Optional[str] = None, *, ctx=None) -> int:
         """Collective flush: this host's pending rows join one cross-host
@@ -416,6 +504,13 @@ class ServeQueue:
             # look dropped — it never writes this round's beat
             FAULTS.fire("pod.flush", key=key)
         multi = multihost.is_multiprocess()
+        if key is None and multi and not multihost.POD_HEALTH.degraded:
+            # cross-host key agreement: each host flushes the *union* of
+            # everyone's pending key sets, not just its own — hosts with
+            # disjoint keys would otherwise run different collective
+            # sequences and deadlock the pod.  A host missing a key
+            # participates with a zero slab, as the SPMD contract allows.
+            keys = self._agree_pod_keys(keys)
         dispatched = 0
         for k in keys:
             with self._cv:
@@ -425,6 +520,7 @@ class ServeQueue:
                 st = self._stat_locked(k)
                 if rows:
                     self._cv.notify_all()  # wake backpressured submitters
+            self._note_dispatch(reqs)
             if not multi:
                 # single process: the collective is trivially local and
                 # cannot stall on a peer — no watchdog overhead
@@ -441,6 +537,50 @@ class ServeQueue:
                 self._dispatch_pod_guarded(k, reqs, st, ctx)
             dispatched += rows
         return dispatched
+
+    def _agree_pod_keys(self, local: List[str]) -> List[str]:
+        """All-gather every host's pending key set; return the sorted
+        union (collective — all hosts must call this together, which
+        ``pod_flush(None)``'s SPMD contract already guarantees).
+
+        Runs under the pod watchdog like any other collective: if a peer
+        dropped before the gather, the survivors degrade the pod and
+        fall back to their local key list (whose requests the caller
+        then serves through the degraded local-only path).
+        """
+        import json
+        from repro.launch import multihost
+        health = multihost.POD_HEALTH
+        round_id = health.beat()
+        box: Dict[str, object] = {}
+        done = threading.Event()
+
+        def run():
+            try:
+                box["got"] = multihost.allgather_bytes(
+                    json.dumps(sorted(local)).encode())
+            except BaseException as e:
+                box["exc"] = e
+            finally:
+                done.set()
+
+        t = threading.Thread(target=run, daemon=True,
+                             name="repro-pod-key-agree")
+        t.start()
+        if done.wait(timeout=multihost.pod_watchdog_s()):
+            exc = box.get("exc")
+            if exc is not None:
+                raise exc  # transport failure is pod-fatal, same as dispatch
+            agreed = set()
+            for blob in box["got"]:
+                agreed.update(json.loads(bytes(blob).decode()))
+            return sorted(agreed)
+        offenders = health.check_round(round_id)
+        health.mark_degraded(offenders)
+        TRACER.instant("pod.watchdog", cat="pod",
+                       args={"phase": "key_agreement", "round": round_id,
+                             "offenders": list(offenders)})
+        return sorted(local)
 
     def _dispatch_pod_guarded(self, k: str, reqs: List, st, ctx) -> None:
         """Run one collective dispatch under the pod watchdog."""
@@ -574,11 +714,28 @@ class ServeQueue:
         TRACER.instant("queue.crash", cat="queue",
                        args={"error": repr(exc)})
         for k, reqs in pending.items():
+            self._note_failed(reqs)
             for r in reqs:
                 r.future.set_exception(err)
             stats[k].on_failure(requests=len(reqs),
                                 rows=sum(r.n for r in reqs),
                                 reason="dispatcher_crash", busy_s=0.0)
+
+    def _note_failed(self, reqs: List) -> None:
+        """Tenant accounting for requests failed without a dispatch
+        (dispatcher crash, drain-free close)."""
+        self._note_dispatch(reqs)
+        if self.tenancy is None:
+            return
+        agg: Dict[str, list] = {}
+        for r in reqs:
+            t = getattr(r, "tenant", None)
+            if t is not None:
+                c = agg.setdefault(t, [0, 0])
+                c[0] += 1
+                c[1] += r.n
+        for t, (n_req, n_rows) in agg.items():
+            self.tenancy.on_dropped(t, n_req, n_rows)
 
     # ------------------------------------------------------------ close ---
     def close(self, drain: bool = True, *, timeout: float = 30.0) -> None:
@@ -606,6 +763,7 @@ class ServeQueue:
                 self._cv.notify_all()
             err = RuntimeError("ServeQueue closed before dispatch")
             for k, reqs in pending.items():
+                self._note_failed(reqs)
                 for r in reqs:
                     r.future.set_exception(err)
                 stats[k].on_failure(requests=len(reqs),
@@ -626,7 +784,23 @@ class ServeQueue:
             elif delay is not None and \
                     now - reqs[0].t_enqueue >= delay:
                 due.append((k, "deadline"))
-        return due
+        return self._order_due_locked(due)
+
+    def _order_due_locked(self, due):
+        """Under overload with a tenancy board, due keys flush in DRR
+        order (weighted fair share) instead of dict insertion order."""
+        if self.tenancy is None or len(due) < 2 or \
+                self._rows_total <= self.policy.max_batch_rows:
+            return due
+        try:
+            pairs = [(k, sum(r.n for r in self._pending.get(k, ())))
+                     for k, _ in due]
+            order = {k: i for i, k in
+                     enumerate(self.tenancy.order_keys(pairs))}
+            return sorted(due, key=lambda kw: order.get(kw[0], len(order)))
+        except Exception as exc:
+            note_static_fallback("tenancy", "drr-error", repr(exc))
+            return due
 
     def _nearest_deadline(self) -> Optional[float]:
         if not self._may_deadline():

@@ -149,7 +149,8 @@ class AdaptiveFlushController:
                  measured_min_batches: int = 2,
                  correction_clamp: float = 20.0,
                  peak_flops: float = PEAK_FLOPS,
-                 hbm_bw: float = HBM_BW):
+                 hbm_bw: float = HBM_BW,
+                 tenancy=None):
         if policy is None:
             from repro.serve.queue import FlushPolicy
             policy = FlushPolicy()
@@ -168,6 +169,12 @@ class AdaptiveFlushController:
         self.correction_clamp = correction_clamp
         self.peak_flops = peak_flops
         self.hbm_bw = hbm_bw
+        # tenancy board (repro.serve.tenancy.TenantBoard): a key bound
+        # to a QoS tier gets that tier's deadline target as a per-key
+        # bound — latency tenants cap the wait, throughput tenants may
+        # wait past the static policy to build fat batches.  ServeQueue
+        # wires this automatically when both are attached.
+        self.tenancy = tenancy
         self._widths_for = widths_for or _default_widths_for
         self._lock = threading.Lock()
         self._widths: Dict[str, Optional[list]] = {}
@@ -325,13 +332,29 @@ class AdaptiveFlushController:
             cap = min(cap, self.measured_service_factor * t_serve)
         delay = min(fill_s, cap)
         hi = static if static is not None else self.max_delay_s
+        # QoS tier bound: a latency-tier tenant's target *caps* how long
+        # its key may wait (an SLO, not a hint); a throughput-tier
+        # target *raises* the ceiling so fat batches can fill even when
+        # the static policy is tighter.  Board failures degrade to the
+        # tier-free decision — the controller must never raise into the
+        # queue.
+        tier = target_s = None
+        if self.tenancy is not None:
+            try:
+                tier, target_s = self.tenancy.qos_for_key(key)
+            except Exception:
+                tier = target_s = None
+        if target_s is not None:
+            hi = min(hi, target_s) if tier == "latency" \
+                else max(hi, target_s)
         delay = max(self.min_delay_s, min(delay, hi))
         self.last_decision[key] = {
             "arrival_rate_rows_s": rate, "bucket_target": target,
             "cap_bucket": cap_bucket,
             "batch_latency_s": t_serve, "latency_source": source,
             "predicted_batch_latency_s": pred,
-            "fill_s": fill_s, "delay_s": delay}
+            "fill_s": fill_s, "delay_s": delay,
+            "qos_tier": tier, "qos_target_s": target_s}
         _DECISIONS.inc(1, key=key, source=source)
         self._memo[key] = (now, delay)
         return delay
